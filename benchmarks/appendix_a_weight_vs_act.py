@@ -1,0 +1,88 @@
+"""Paper Appendix A analogue: N:M weight sparsity vs Naïve top-k activation
+sparsity — activation sparsity should dominate at equal N:M (the paper's
+motivating observation)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import (build_eval_model, csv_row, eval_batches,
+                               fidelity_metrics)
+from repro.core import weight_sparsity
+from repro.core.policy import naive_policy
+
+
+def _prune_weights(params, method: str, rng):
+    """Apply N:M weight pruning to every 2D/3D linear in the blocks."""
+    import jax.numpy as jnp
+
+    def visit(p):
+        if isinstance(p, dict):
+            out = {}
+            for k, v in p.items():
+                if isinstance(v, dict) and "w" in v and hasattr(v["w"], "ndim") \
+                        and k in ("q_proj", "k_proj", "v_proj", "o_proj",
+                                  "gate_proj", "up_proj", "down_proj"):
+                    w = v["w"]
+                    def prune2d(w2):
+                        d_in = w2.shape[0]
+                        am = jnp.ones((d_in,))
+                        if method == "magnitude":
+                            return weight_sparsity.magnitude_nm(w2, 2, 4)
+                        if method == "wanda":
+                            return weight_sparsity.wanda_nm(w2, am, 2, 4)
+                        return weight_sparsity.sparsegpt_nm(w2, am, 2, 4)
+                    if w.ndim == 2:
+                        w = prune2d(w)
+                    elif w.ndim == 3:
+                        w = jax.vmap(prune2d)(w)
+                    out[k] = {**v, "w": w}
+                else:
+                    out[k] = visit(v)
+            return out
+        return p
+
+    return visit(params)
+
+
+def run() -> list[str]:
+    rows = []
+    cfg, model, params = build_eval_model("llama31_8b")
+    batches = eval_batches(cfg, n=2)
+
+    # activation sparsity: naive top-k 2:4 (no skipping — Appendix A setup)
+    fm_act = fidelity_metrics(model, params, batches, naive_policy(2, 4))
+    rows.append(csv_row("appendix_a/activation_naive_2:4", 0.0,
+                        f"pert={fm_act['perturbation']:.4f}"))
+
+    results = {"activation": fm_act["perturbation"]}
+    for method in ("magnitude", "wanda", "sparsegpt"):
+        pruned = _prune_weights(params, method, jax.random.PRNGKey(0))
+        from repro.core.policy import DENSE
+        fm = fidelity_metrics(model, pruned, batches, DENSE.with_(
+            enabled=False))
+        # dense-policy forward of the weight-pruned model vs dense original:
+        # fidelity_metrics compares against the PRUNED model's own dense —
+        # recompute against original instead:
+        import jax.numpy as jnp
+        e_sum = 0.0
+        for b in batches:
+            inp = {"tokens": b["tokens"][:, :-1]}
+            y0 = model.forward(params, inp, policy=DENSE, phase="prefill")
+            y1 = model.forward(pruned, inp, policy=DENSE, phase="prefill")
+            e_sum += float(jnp.linalg.norm(y1 - y0) /
+                           (jnp.linalg.norm(y0) + 1e-9))
+        pert = e_sum / len(batches)
+        results[method] = pert
+        rows.append(csv_row(f"appendix_a/weight_{method}_2:4", 0.0,
+                            f"pert={pert:.4f}"))
+
+    ok = all(results["activation"] < results[m]
+             for m in ("magnitude", "wanda", "sparsegpt"))
+    rows.append(csv_row("appendix_a/check/activation_dominates", 0.0,
+                        "PASS" if ok else "FAIL"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

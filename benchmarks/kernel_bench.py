@@ -1,0 +1,62 @@
+"""Kernel microbenchmarks + analytic roofline for the Pallas hot paths.
+
+Wall-times here are CPU interpret-mode (NOT TPU-representative); the
+derived column carries the analytic TPU roofline estimate per call:
+  nm_prune    — bandwidth-bound: 2·T·D·dtype_bytes / 819 GB/s
+  nm_spmm     — compute-bound:   2·T·(D·n/m)·N_out / 197 TFLOP/s
+  w8a8_matmul — compute-bound:   2·T·D·N_out / (2×197) TFLOP/s (int8 2×)
+vs the dense bf16 GEMM baseline 2·T·D·N_out / 197 TFLOP/s.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, timeit_us
+from repro.kernels import ops, ref
+
+HBM = 819e9
+PEAK = 197e12
+
+# interpret-mode is slow on CPU — keep shapes modest; the derived column
+# carries the analytic TPU estimate which is what §Roofline consumes
+SHAPES = [(256, 2048, 2048)]
+
+
+def run() -> list[str]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for t, d, no in SHAPES:
+        k1, k2, k3 = jax.random.split(key, 3)
+        x = jax.random.normal(k1, (t, d), dtype=jnp.bfloat16)
+        w = jax.random.normal(k2, (d, no), dtype=jnp.bfloat16)
+        scale = jax.random.uniform(k3, (d,)) + 0.5
+        dense_s = 2 * t * d * no / PEAK
+
+        us = timeit_us(lambda: ops.nm_prune(x, scale, 8, 16), iters=3)
+        est = 2 * t * d * 2 / HBM
+        rows.append(csv_row(f"kernel/nm_prune/{t}x{d}", us,
+                            f"tpu_est_s={est:.3e};dense_gemm_s={dense_s:.3e};"
+                            f"overhead_frac={est/dense_s:.3f}"))
+
+        us = timeit_us(lambda: ops.nm_spmm(x, w, scale, 8, 16), iters=3)
+        est = 2 * t * (d // 2) * no / PEAK
+        rows.append(csv_row(f"kernel/nm_spmm/{t}x{d}x{no}", us,
+                            f"tpu_est_s={est:.3e};speedup_vs_dense="
+                            f"{dense_s/est:.2f}x"))
+
+        xq = jax.random.randint(k1, (t, d), -127, 128).astype(jnp.int8)
+        wq = jax.random.randint(k2, (d, no), -127, 128).astype(jnp.int8)
+        ws = jax.random.uniform(k3, (no,)) * 0.01
+        us = timeit_us(
+            lambda: ops.w8a8_matmul(xq, wq, jnp.float32(0.01), ws), iters=3)
+        est = 2 * t * d * no / (2 * PEAK)
+        rows.append(csv_row(f"kernel/w8a8/{t}x{d}x{no}", us,
+                            f"tpu_est_s={est:.3e};speedup_vs_bf16="
+                            f"{dense_s/est:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,55 @@
+"""Benchmark harness entry point — one module per paper table.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,...]
+
+Prints ``name,us_per_call,derived`` CSV rows.  Ordering-claim checks embed
+PASS/FAIL in the derived column; a FAIL exits non-zero.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+TABLES = ("coverage", "table1", "table2", "table3", "appendix_a",
+          "sensitivity", "kernels")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"comma list from {TABLES}")
+    args = ap.parse_args(argv)
+    selected = args.only.split(",") if args.only else list(TABLES)
+
+    from benchmarks import (appendix_a_weight_vs_act, coverage, kernel_bench,
+                            sensitivity_scan, table1_amber, table2_osparse,
+                            table3_generation)
+
+    runners = {
+        "coverage": coverage.run,
+        "table1": table1_amber.run,
+        "table2": table2_osparse.run,
+        "table3": table3_generation.run,
+        "appendix_a": appendix_a_weight_vs_act.run,
+        "sensitivity": sensitivity_scan.run,
+        "kernels": kernel_bench.run,
+    }
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in selected:
+        t0 = time.time()
+        rows = runners[name]()
+        for r in rows:
+            print(r, flush=True)
+            if r.rstrip().endswith("FAIL"):
+                failures += 1
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        print(f"# {failures} ordering-claim check(s) FAILED")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

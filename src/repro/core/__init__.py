@@ -1,0 +1,51 @@
+"""Amber Pruner core: N:M activation sparsity, scoring, policies, quant."""
+from repro.core.nm import (
+    apply_nm,
+    compact_columns,
+    nm_topk_mask,
+    sparsity_fraction,
+    tile_consensus_channels,
+    validate_nm,
+)
+from repro.core.policy import DENSE, SparsityPolicy, naive_policy, paper_policy
+from repro.core.pruner import precompute_scales, prune_input, sparse_matmul
+from repro.core.quant import QuantConfig, make_quantized_linear, smooth_factors
+from repro.core.scoring import (
+    channel_norm_scale,
+    precompute_scale,
+    robust_norm_scale,
+    score_activations,
+)
+from repro.core.sensitivity import (
+    coverage,
+    relative_perturbation,
+    select_qgate_skips,
+    sensitivity_scan,
+)
+
+__all__ = [
+    "apply_nm",
+    "compact_columns",
+    "nm_topk_mask",
+    "sparsity_fraction",
+    "tile_consensus_channels",
+    "validate_nm",
+    "DENSE",
+    "SparsityPolicy",
+    "naive_policy",
+    "paper_policy",
+    "precompute_scales",
+    "prune_input",
+    "sparse_matmul",
+    "QuantConfig",
+    "make_quantized_linear",
+    "smooth_factors",
+    "channel_norm_scale",
+    "precompute_scale",
+    "robust_norm_scale",
+    "score_activations",
+    "coverage",
+    "relative_perturbation",
+    "select_qgate_skips",
+    "sensitivity_scan",
+]

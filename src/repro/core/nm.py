@@ -1,0 +1,120 @@
+"""N:M structured sparsity primitives.
+
+An N:M pattern keeps the N largest-scoring elements inside every contiguous
+group of M elements along the *input-channel* (last) axis.  These are the
+low-level building blocks used by the Amber Pruner (per-token masks) and the
+TPU-native tile-consensus variant (per-tile shared masks).
+
+All functions are pure jnp and jit-safe; scores are computed in float32 for
+stable tie-breaking regardless of the activation dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "nm_topk_mask",
+    "apply_nm",
+    "nm_group_view",
+    "sparsity_fraction",
+    "validate_nm",
+    "tile_consensus_channels",
+    "compact_columns",
+]
+
+
+def nm_group_view(x: jax.Array, m: int) -> jax.Array:
+    """Reshape ``(..., D)`` to ``(..., D // m, m)`` groups of M channels."""
+    d = x.shape[-1]
+    if d % m != 0:
+        raise ValueError(f"last dim {d} not divisible by group size {m}")
+    return x.reshape(*x.shape[:-1], d // m, m)
+
+
+def nm_topk_mask(scores: jax.Array, n: int, m: int) -> jax.Array:
+    """Boolean keep-mask with exactly N True per contiguous group of M.
+
+    Ties break toward the lower channel index (``lax.top_k`` semantics),
+    making the mask deterministic.
+
+    Implementation note: N rounds of first-occurrence argmax (max + compare
+    + cumsum over the M lanes) instead of ``top_k``+``one_hot``.  Identical
+    output, but every op is an element-wise/last-dim reduction, so GSPMD
+    keeps the token axes sharded — ``top_k``'s variadic sort partitioning
+    forced a full batch all-gather of the scores in the 32k-prefill cells
+    (measured: 108 GiB of gathered scores per qwen2.5 layer, EXPERIMENTS.md
+    §Perf iteration 1).  It is also the exact construction the Pallas
+    kernel uses, so kernel↔reference equality is structural.
+
+    Args:
+      scores: ``(..., D)`` non-negative importance scores, D % m == 0.
+      n, m:   the N:M pattern (0 < n <= m).
+    Returns:
+      bool mask of ``scores.shape`` with per-group popcount == n.
+    """
+    if not (0 < n <= m):
+        raise ValueError(f"invalid N:M pattern {n}:{m}")
+    if n == m:  # dense — nothing to do
+        return jnp.ones(scores.shape, dtype=bool)
+    g = nm_group_view(scores.astype(jnp.float32), m)        # (..., G, m)
+    remaining = g
+    keep = jnp.zeros(g.shape, dtype=jnp.bool_)
+    for _ in range(n):
+        cur = remaining.max(axis=-1, keepdims=True)
+        eq = remaining == cur
+        first = eq & (jnp.cumsum(eq.astype(jnp.int32), axis=-1) == 1)
+        keep = keep | first
+        remaining = jnp.where(first, -jnp.inf, remaining)
+    return keep.reshape(scores.shape)
+
+
+def apply_nm(x: jax.Array, scores: jax.Array, n: int, m: int) -> jax.Array:
+    """Zero out everything but the per-group top-N scored entries of ``x``."""
+    mask = nm_topk_mask(scores, n, m)
+    return jnp.where(mask, x, jnp.zeros((), dtype=x.dtype))
+
+
+def sparsity_fraction(x: jax.Array) -> jax.Array:
+    """Fraction of exactly-zero entries (diagnostic)."""
+    return jnp.mean((x == 0).astype(jnp.float32))
+
+
+def validate_nm(mask: jax.Array, n: int, m: int) -> jax.Array:
+    """True iff every group of M has at most N kept entries (bool scalar)."""
+    g = nm_group_view(mask.astype(jnp.int32), m)
+    return jnp.all(g.sum(-1) <= n)
+
+
+# ---------------------------------------------------------------------------
+# Tile-consensus mode (TPU-native compacted matmul support, see DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+def tile_consensus_channels(scores: jax.Array, n: int, m: int) -> jax.Array:
+    """Pick one shared N:M channel set for a whole token tile.
+
+    Aggregates per-token scores over the token axes with an L2 norm (the
+    Wanda ``‖X_:,j‖₂`` statistic restricted to the tile) and returns the
+    *channel indices* kept, shaped ``(G, n)`` sorted ascending inside each
+    group so the gather below is monotonic.
+
+    Args:
+      scores: ``(T, D)`` (or ``(..., T, D)`` — leading axes are pooled too).
+    """
+    s2 = scores.astype(jnp.float32) ** 2
+    pooled = jnp.sqrt(s2.reshape(-1, scores.shape[-1]).sum(axis=0))  # (D,)
+    g = nm_group_view(pooled, m)                                     # (G, m)
+    _, idx = jax.lax.top_k(g, n)                                     # (G, n)
+    idx = jnp.sort(idx, axis=-1)
+    base = (jnp.arange(g.shape[0]) * m)[:, None]
+    return idx + base                                                # absolute channel ids
+
+
+def compact_columns(x: jax.Array, channels: jax.Array) -> jax.Array:
+    """Gather the kept channels: ``(..., D) -> (..., G*n)``.
+
+    ``channels`` is the absolute-index output of
+    :func:`tile_consensus_channels` (shape ``(G, n)``).
+    """
+    flat = channels.reshape(-1)
+    return jnp.take(x, flat, axis=-1)

@@ -1,0 +1,140 @@
+"""Amber Pruner: the functional pruning path + offline scale precomputation.
+
+``prune_input`` is the single entry point the model zoo's ``SparseLinear``
+calls on a projection input.  It dispatches between:
+
+  * **per-token** N:M masking (paper-faithful; mathematically identical to
+    the SpMM the paper runs on sparse tensor cores), and
+  * **tile-consensus** N:M (TPU-native compacted-matmul mode, DESIGN.md §2).
+
+``precompute_scales`` walks a parameter pytree offline and attaches the
+Robust-Norm / Wanda channel scales next to every prunable weight — the
+paper's "auxiliary weights" (<0.05% of model size).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nm, scoring
+from repro.core.policy import SparsityPolicy
+
+__all__ = [
+    "prune_input",
+    "sparse_matmul",
+    "precompute_scales",
+    "SCALE_KEY",
+]
+
+SCALE_KEY = "amber_scale"  # aux-param key stored alongside "w"/"b"
+
+
+def prune_input(
+    x: jax.Array,
+    scale: jax.Array | None,
+    policy: SparsityPolicy,
+) -> jax.Array:
+    """Apply per-token N:M sparsity to a projection input.
+
+    Args:
+      x:      ``(..., d_in)`` activations.
+      scale:  ``(d_in,)`` precomputed channel scale, or None for naive |X|.
+      policy: static sparsity policy (already filtered for module/layer).
+    Returns:
+      x with exactly N of every M contiguous channels kept per token.
+    """
+    scores = scoring.score_activations(x, scale)
+    return nm.apply_nm(x, scores, policy.n, policy.m)
+
+
+def sparse_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    scale: jax.Array | None,
+    policy: SparsityPolicy,
+) -> jax.Array:
+    """N:M-sparsified ``x @ w`` with the policy's mode.
+
+    per-token mode: mask then dense matmul (functional reproduction — on TPU
+    the MXU cannot skip per-row patterns; see DESIGN.md §2).
+
+    tile-consensus mode: one shared channel set per token tile → compacted
+    dense matmul at (n/m) of the FLOPs.  Token axes are flattened, tiled by
+    ``policy.tile_size`` (padded if needed), and each tile contracts only its
+    surviving channels against the gathered weight rows.
+    """
+    if not policy.tile_consensus:
+        xp = prune_input(x, scale, policy)
+        return xp @ w
+
+    *lead, d_in = x.shape
+    t = 1
+    for s in lead:
+        t *= s
+    xf = x.reshape(t, d_in)
+    ts = min(policy.tile_size, t)
+    pad = (-t) % ts
+    if pad:
+        xf = jnp.concatenate([xf, jnp.zeros((pad, d_in), xf.dtype)], axis=0)
+    n_tiles = xf.shape[0] // ts
+    xt = xf.reshape(n_tiles, ts, d_in)
+
+    def one_tile(xtile: jax.Array) -> jax.Array:
+        scores = scoring.score_activations(xtile, scale)
+        chans = nm.tile_consensus_channels(scores, policy.n, policy.m)  # (G, n)
+        xc = nm.compact_columns(xtile, chans)           # (ts, G*n)
+        wc = jnp.take(w, chans.reshape(-1), axis=0)      # (G*n, d_out)
+        return xc @ wc
+
+    yt = jax.vmap(one_tile)(xt)                          # (n_tiles, ts, d_out)
+    y = yt.reshape(n_tiles * ts, -1)[:t]
+    return y.reshape(*lead, w.shape[-1])
+
+
+def precompute_scales(params: Any, policy: SparsityPolicy) -> Any:
+    """Offline pass: attach Amber channel scales to every prunable linear.
+
+    Walks the (nested-dict) parameter pytree; every sub-dict that looks like
+    a linear (has a 2D ``w``) and whose name is prunable under the policy
+    gets an ``amber_scale`` entry.  MoE expert weights (3D, leading expert
+    axis) get per-expert scales unless ``policy.moe_plain_score`` (the
+    paper's rule: Robust-Norm is N/A under dynamic routing).
+
+    Layer-stacked weights (3D with leading layer axis, from ``lax.scan``
+    stacking) get per-layer scales via vmap.
+    """
+    if policy.score_mode == "naive" or not policy.enabled:
+        return params
+
+    def visit(d: Any, path: tuple) -> Any:
+        if not isinstance(d, dict):
+            return d
+        out: Dict[str, Any] = {}
+        for k, v in d.items():
+            if isinstance(v, dict) and "w" in v and not isinstance(v["w"], dict):
+                w = v["w"]
+                module = k
+                is_expert = "expert" in "/".join(path + (k,))
+                prunable = policy.should_prune(module, None)
+                new_v = dict(v)
+                if prunable and hasattr(w, "ndim"):
+                    if is_expert and policy.moe_plain_score:
+                        pass  # naive |X| scoring inside routed experts
+                    elif w.ndim == 2:
+                        new_v[SCALE_KEY] = scoring.precompute_scale(w, policy.score_mode)
+                    elif w.ndim == 3:  # (layers, d_in, d_out) scan-stacked
+                        fn = lambda wi: scoring.precompute_scale(wi, policy.score_mode)
+                        new_v[SCALE_KEY] = jax.vmap(fn)(w)
+                    elif w.ndim == 4:  # (layers, experts, d_in, d_out)
+                        if not policy.moe_plain_score:
+                            fn = lambda wi: scoring.precompute_scale(wi, policy.score_mode)
+                            new_v[SCALE_KEY] = jax.vmap(jax.vmap(fn))(w)
+                out[k] = {kk: visit(vv, path + (k, kk)) if isinstance(vv, dict) else vv
+                          for kk, vv in new_v.items()}
+            else:
+                out[k] = visit(v, path + (k,)) if isinstance(v, dict) else v
+        return out
+
+    return visit(params, ())

@@ -1,0 +1,192 @@
+"""W8A8 quantization (SmoothQuant) and Outstanding-sparse.
+
+SmoothQuant (Xiao et al. 2023) migrates activation outliers into the weights
+with a per-input-channel factor
+
+    s_j = max|X_:,j|^alpha / max|W_:,j|^(1-alpha)            (paper Eq. 9)
+
+and rewrites  Y = X W  as  Y = (X diag(1/s)) (diag(s) W), after which both
+factors are int8-quantizable (per-tensor activations, per-channel weights).
+
+**Outstanding-sparse** (paper §Outstanding-sparse) inverts the factor:
+``ŝ_j = 1/s_j`` with a small alpha (0.10), which *expands* the activation
+dynamic range instead of compressing it — empirically this exposes the
+structured sparsity pattern that Amber Pruner selects, letting sparsity and
+W8A8 stack.
+
+Everything here is calibration + offline graph rewrite; the runtime int8
+matmul lives in ``repro/kernels/w8a8_matmul.py`` (Pallas) with
+``quantized_matmul`` below as the jnp reference path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantConfig",
+    "ActCalib",
+    "smooth_factors",
+    "quantize_weight_per_channel",
+    "quantize_act_per_tensor",
+    "quantize_act_per_token",
+    "quantized_matmul",
+    "QuantizedLinear",
+    "make_quantized_linear",
+]
+
+_EPS = 1e-8
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static W8A8 deployment description.
+
+    Attributes:
+      alpha:        SmoothQuant migration strength (paper uses 0.10 for
+                    Outstanding-sparse, 0.5-0.85 for vanilla SmoothQuant).
+      outstanding:  invert the smooth factor (ŝ = 1/s) to expand activations.
+      per_token_act: dynamic per-token activation scales (paper: MoE layers
+                    use per-token dynamic quant; attention uses static).
+      skip_modules: projections excluded from quantization (e.g. down_proj
+                    for LLaMA/Qwen2, gate_proj for Qwen3-30B-A3B).
+      skip_layers:  layer indices where *all* linears stay bf16 (LLaMA3.1:
+                    first 5 layers).
+    """
+
+    alpha: float = 0.10
+    outstanding: bool = True
+    per_token_act: bool = False
+    skip_modules: tuple = ("down_proj",)
+    skip_layers: tuple = ()
+
+    def should_quantize(self, module: str, layer_idx: int | None = None) -> bool:
+        if module in self.skip_modules:
+            return False
+        if layer_idx is not None and layer_idx in self.skip_layers:
+            return False
+        return True
+
+
+class ActCalib:
+    """Running per-channel absmax over calibration batches (host-side)."""
+
+    def __init__(self) -> None:
+        self._absmax: Dict[str, jax.Array] = {}
+
+    def observe(self, name: str, x: jax.Array) -> None:
+        am = jnp.max(jnp.abs(x.astype(jnp.float32).reshape(-1, x.shape[-1])), axis=0)
+        if name in self._absmax:
+            am = jnp.maximum(am, self._absmax[name])
+        self._absmax[name] = am
+
+    def absmax(self, name: str) -> jax.Array:
+        return self._absmax[name]
+
+    def names(self) -> Iterable[str]:
+        return self._absmax.keys()
+
+
+def smooth_factors(
+    act_absmax: jax.Array,
+    w: jax.Array,
+    alpha: float,
+    outstanding: bool,
+) -> jax.Array:
+    """Per-input-channel smooth factor s (or ŝ = 1/s for Outstanding-sparse).
+
+    Args:
+      act_absmax: ``(d_in,)`` calibrated per-channel activation absmax.
+      w:          ``(d_in, d_out)`` weights (channel j = row j).
+    Returns:
+      ``(d_in,)`` float32 factor ``s`` such that the rewrite is
+      ``Y = (X / s) (s ⊙ W)`` — for Outstanding-sparse the returned value is
+      already inverted, so the same rewrite expression applies.
+    """
+    a = jnp.maximum(act_absmax.astype(jnp.float32), _EPS)
+    wmax = jnp.maximum(jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-1), _EPS)
+    s = (a**alpha) / (wmax ** (1.0 - alpha))
+    s = jnp.maximum(s, _EPS)
+    if outstanding:
+        s = 1.0 / s
+    return s
+
+
+def quantize_weight_per_channel(w: jax.Array):
+    """Symmetric int8 per-output-channel weight quant → (q, scale(d_out,))."""
+    wf = w.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(wf), axis=0), _EPS) / 127.0
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quantize_act_per_tensor(x: jax.Array, scale: jax.Array):
+    """Static symmetric per-tensor int8 activation quant with given scale."""
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q
+
+
+def quantize_act_per_token(x: jax.Array):
+    """Dynamic per-token int8 quant → (q, scale(..., 1))."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True), _EPS) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quantized_matmul(
+    xq: jax.Array, wq: jax.Array, x_scale: jax.Array, w_scale: jax.Array
+) -> jax.Array:
+    """int8 × int8 → int32 matmul, dequantized to f32 (jnp reference).
+
+    ``x_scale`` is scalar (per-tensor) or ``(..., 1)`` (per-token);
+    ``w_scale`` is ``(d_out,)``.
+    """
+    acc = jax.lax.dot_general(
+        xq,
+        wq,
+        (((xq.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * x_scale * w_scale
+
+
+@dataclasses.dataclass
+class QuantizedLinear:
+    """Offline-rewritten linear: smooth + int8 weights + static act scale."""
+
+    wq: jax.Array          # (d_in, d_out) int8
+    w_scale: jax.Array     # (d_out,) f32
+    smooth: jax.Array      # (d_in,) f32 — divide X by this pre-quant
+    act_scale: jax.Array   # scalar f32 (static per-tensor)
+    per_token: bool = False
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        xs = x.astype(jnp.float32) / self.smooth
+        if self.per_token:
+            xq, ts = quantize_act_per_token(xs)
+            return quantized_matmul(xq, self.wq, ts, self.w_scale).astype(x.dtype)
+        xq = quantize_act_per_tensor(xs, self.act_scale)
+        return quantized_matmul(xq, self.wq, self.act_scale, self.w_scale).astype(x.dtype)
+
+
+def make_quantized_linear(
+    w: jax.Array,
+    act_absmax: jax.Array,
+    cfg: QuantConfig,
+) -> QuantizedLinear:
+    """Offline rewrite of one linear under SmoothQuant / Outstanding-sparse."""
+    s = smooth_factors(act_absmax, w, cfg.alpha, cfg.outstanding)
+    w_smoothed = w.astype(jnp.float32) * s[:, None]
+    wq, w_scale = quantize_weight_per_channel(w_smoothed)
+    act_scale = jnp.maximum(jnp.max(act_absmax / s), _EPS) / 127.0
+    return QuantizedLinear(
+        wq=wq,
+        w_scale=w_scale,
+        smooth=s,
+        act_scale=act_scale.astype(jnp.float32),
+        per_token=cfg.per_token_act,
+    )

@@ -1,0 +1,103 @@
+"""Activation-importance scoring for Amber Pruner.
+
+Three scoring modes, in increasing fidelity (paper §Methodology):
+
+  * ``naive``  — ``S_ij = |X_ij|``  (the Naïve top-k baseline).
+  * ``wanda``  — ``S_ij = |X_ij| · ‖W_:,j‖₂ / min_k ‖W_:,k‖₂``  (Eq. 2;
+                 min-normalized so low-dynamic-range channels cannot
+                 underflow in low-precision inference).
+  * ``robust`` — Robust-Norm Scoring (Eqs. 3-5): winsorize weights to the
+                 [0.5%, 99.5%] percentile band, standardize by the global
+                 mean/variance of the surviving weights, then take channel
+                 L2 norms (min-normalized like ``wanda``).
+
+Weight convention throughout the code base: ``W`` has shape
+``(d_in, d_out)`` so an input channel j is the **row** ``W[j, :]`` — this is
+the transpose of the paper's ``(d_out, d_in)`` layout; the channel norms are
+identical.
+
+Scales depend only on the weights, so they are precomputed offline
+(:func:`precompute_scale`) and stored as auxiliary parameters (<0.05% of
+model size).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "channel_norm_scale",
+    "robust_norm_scale",
+    "precompute_scale",
+    "score_activations",
+    "SCORE_MODES",
+]
+
+SCORE_MODES = ("naive", "wanda", "robust")
+
+_EPS = 1e-12
+
+
+def _min_normalize(norms: jax.Array) -> jax.Array:
+    """``f(W_:,j) = ‖W_:,j‖ / min_k ‖W_:,k‖`` (Eq. 2 / Appendix B Eq. 5)."""
+    return norms / (jnp.min(norms) + _EPS)
+
+
+def channel_norm_scale(w: jax.Array) -> jax.Array:
+    """Wanda-like per-input-channel scale from raw weight column norms.
+
+    Args:
+      w: ``(d_in, d_out)`` weight matrix.
+    Returns:
+      ``(d_in,)`` float32 scale.
+    """
+    norms = jnp.linalg.norm(w.astype(jnp.float32), axis=-1)
+    return _min_normalize(norms)
+
+
+def robust_norm_scale(
+    w: jax.Array, q_low: float = 0.005, q_high: float = 0.995
+) -> jax.Array:
+    """Robust-Norm Scoring scale (paper Eqs. 3-5).
+
+    1. Outlier removal: weights outside the [q_low, q_high] percentile band
+       are winsorized to the band edge (the paper "discards" them; clamping
+       keeps per-channel element counts equal, which the channel norm in
+       step 3 requires — the contribution of a clamped outlier saturates at
+       the band edge either way).
+    2. Standardize by the global mean/std of the winsorized tensor.
+    3. Channel-wise L2 norm, min-normalized.
+
+    Args:
+      w: ``(d_in, d_out)`` weight matrix.
+    Returns:
+      ``(d_in,)`` float32 scale.
+    """
+    wf = w.astype(jnp.float32)
+    lo = jnp.quantile(wf, q_low)
+    hi = jnp.quantile(wf, q_high)
+    wc = jnp.clip(wf, lo, hi)
+    mu = jnp.mean(wc)
+    sd = jnp.sqrt(jnp.var(wc) + _EPS)
+    wn = (wc - mu) / sd
+    norms = jnp.linalg.norm(wn, axis=-1)
+    return _min_normalize(norms)
+
+
+def precompute_scale(w: jax.Array, mode: str) -> jax.Array | None:
+    """Offline per-channel scale for a linear's weight, or None for naive."""
+    if mode == "naive":
+        return None
+    if mode == "wanda":
+        return channel_norm_scale(w)
+    if mode == "robust":
+        return robust_norm_scale(w)
+    raise ValueError(f"unknown score mode {mode!r}; expected one of {SCORE_MODES}")
+
+
+def score_activations(x: jax.Array, scale: jax.Array | None) -> jax.Array:
+    """``S_ij = |X_ij| · scale_j`` (scale None → naive |X|). float32 output."""
+    s = jnp.abs(x.astype(jnp.float32))
+    if scale is not None:
+        s = s * scale.astype(jnp.float32)
+    return s

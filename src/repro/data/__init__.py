@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, lm_batch, calibration_stream
+
+__all__ = ["DataConfig", "lm_batch", "calibration_stream"]

@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (
+    batch_spec,
+    cache_specs,
+    data_axes,
+    param_specs,
+)
+
+__all__ = ["batch_spec", "cache_specs", "data_axes", "param_specs"]

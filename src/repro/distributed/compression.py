@@ -1,0 +1,56 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Int8 stochastic-free symmetric quantization with a persistent error-feedback
+buffer: the quantization residual of step t is added back to the gradient of
+step t+1, so the *accumulated* update is unbiased (Karimireddy et al. 2019,
+"EF-SGD").  On a real multi-pod deployment the int8 tensors ride the
+cross-pod DCI/ICI all-reduce at 4× less traffic — the cross-pod DP reduce is
+the collective this targets (see EXPERIMENTS.md §Roofline, collective term).
+
+Under single-controller pjit the collective itself is emitted by XLA, so
+this module implements the *algorithmic* transform (quantize → dequantize →
+error feedback) as a gradient-pipeline stage; the lowering-level traffic
+reduction is modeled in the roofline analysis (collective bytes ÷ 4 for the
+DP all-reduce component when compression is on).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ef_int8_init", "ef_int8_compress"]
+
+_EPS = 1e-12
+
+
+def _quant_dequant(g: jax.Array) -> jax.Array:
+    """Symmetric per-tensor int8 round-trip (the lossy channel)."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), _EPS) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127)
+    return q * scale
+
+
+def ef_int8_init(params: Any) -> Any:
+    """Zero error-feedback buffers mirroring the parameter pytree."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_int8_compress(grads: Any, ef: Any) -> Tuple[Any, Any]:
+    """(grads, ef) → (compressed grads, new ef).
+
+    compressed = Q(g + ef);  new_ef = (g + ef) − compressed.
+    """
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        comp = _quant_dequant(target)
+        return comp, target - comp
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(ef)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in outs]), tdef.unflatten(
+        [o[1] for o in outs])

@@ -1,0 +1,333 @@
+"""Partitioning rules: DP (pod × data) × TP/EP (model) for the whole zoo.
+
+Megatron-style tensor parallelism over the ``model`` axis with
+**divisibility-aware fallbacks** (a dim is sharded only when the mesh axis
+divides it — e.g. whisper's vocab 51865 is odd → its embedding replicates;
+granite's kv_heads=1 → KV caches replicate over model and shard on batch):
+
+  * column-parallel (out-dim on model): q/k/v/gate/up, rwkv r/k/v/g,
+    rg-lru in/gate, lm_head, router-free expert up/gate;
+  * row-parallel (in-dim on model):     o_proj, down_proj, rg-lru out;
+  * expert-parallel:                    MoE expert stacks shard the expert
+    axis when n_experts % model == 0 (llama4-scout: 16/16 → pure EP),
+    falling back to intra-expert TP otherwise (mixtral: 8 experts → d_ff);
+  * everything 1D (norms, scales, biases of row-parallel layers) replicates;
+    biases of column-parallel layers follow the out-dim.
+
+Leading stack axes (scan periods, experts) are skipped by matching the
+*trailing* dims, so the same rule covers unrolled and stacked params.
+
+The optimizer state reuses the parameter specs leaf-for-leaf (mu/nu have
+identical shapes) — a fully sharded (ZeRO-1-like) optimizer under pjit.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "data_axes",
+    "param_specs",
+    "batch_spec",
+    "cache_specs",
+    "opt_state_specs",
+    "named",
+]
+
+# module names whose weight is column-parallel (shard trailing dim)
+_COL = {
+    "q_proj", "k_proj", "v_proj", "gate_proj", "up_proj", "lm_head",
+    "r_proj", "k_proj_tm", "v_proj_tm", "g_proj", "gate_a", "gate_x",
+}
+# row-parallel (shard the d_in dim, i.e. dim -2)
+_ROW = {"o_proj", "down_proj"}
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The DP axes: ("pod", "data") on a multi-pod mesh, else ("data",)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return n % mesh.shape[axis] == 0
+
+
+def _spec_for(path: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh,
+              n_experts: int) -> P:
+    names = [p for p in path]
+    leaf = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    gparent = names[-3] if len(names) >= 3 else ""
+    nd = len(shape)
+    none = (None,) * nd
+
+    def shard_dim(i: int) -> P:
+        if not _div(shape[i], mesh, "model"):
+            return P(*none)
+        out = list(none)
+        out[i] = "model"
+        return P(*out)
+
+    # --- embeddings ---
+    if parent == "embed" and leaf == "w":
+        # (V, d): prefer vocab sharding, fall back to d_model
+        if _div(shape[0], mesh, "model"):
+            return shard_dim(0)
+        return shard_dim(1)
+
+    # --- MoE expert stacks: (..., E, d_in, d_out) under "experts" ---
+    # Default: intra-expert TP (shard d_ff) — ragged_dot's GSPMD support for
+    # an expert-sharded rhs is not guaranteed, so EP (sharding the E axis)
+    # is a perf-iteration lever rather than the baseline (EXPERIMENTS §Perf).
+    if gparent == "experts" or (len(names) >= 4 and names[-4] == "experts"):
+        if parent in _COL:
+            return shard_dim(nd - 1)
+        if parent in _ROW:
+            return shard_dim(nd - 2)
+        return P(*none)
+
+    if leaf == "w" and parent in _COL and nd >= 2:
+        return shard_dim(nd - 1)
+    if leaf == "w" and parent in _ROW and nd >= 2:
+        return shard_dim(nd - 2)
+    if leaf == "b" and parent in _COL:
+        return shard_dim(nd - 1)
+    if leaf == "amber_scale" and parent in _ROW:
+        # scale has length d_in — matches the sharded contraction dim
+        return shard_dim(nd - 1)
+    if leaf == "w" and parent == "router":
+        return P(*none)
+    if leaf in ("conv_w", "conv_b", "lam", "w0", "w_A", "w_B", "u",
+                "mix_r", "mix_k", "mix_v", "mix_w", "mix_g"):
+        return P(*none)
+    return P(*none)
+
+
+def param_specs(params: Any, mesh: Mesh, n_experts: int = 0,
+                fsdp: bool = False) -> Any:
+    """PartitionSpec pytree mirroring ``params`` (works on ShapeDtypeStructs).
+
+    ``fsdp=True`` additionally shards each tensor's largest still-free dim
+    over the DP axes (ZeRO-3): params live fully sharded and are
+    all-gathered per layer by XLA at use.  This is how >10B-param training
+    fits a 16 GB/chip pod; inference cells keep TP-only specs (weights are
+    read once per token there, FSDP would gather every step).
+    """
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def visit(path, leaf):
+        keys = tuple(
+            p.key if hasattr(p, "key") else str(p) for p in path
+        )
+        spec = _spec_for(keys, leaf.shape, mesh, n_experts)
+        if not fsdp or dp_entry is None:
+            return spec
+        spec_t = tuple(spec) + (None,) * (len(leaf.shape) - len(tuple(spec)))
+        dims = sorted(range(len(leaf.shape)), key=lambda i: -leaf.shape[i])
+        for i in dims:
+            if spec_t[i] is None and leaf.shape[i] % dp_size == 0 \
+                    and leaf.shape[i] >= dp_size:
+                out = list(spec_t)
+                out[i] = dp_entry
+                return P(*out)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Token batches: batch dim over all DP axes."""
+    dp = data_axes(mesh)
+    return P(dp if len(dp) > 1 else dp[0])
+
+
+def cache_specs(cache: Any, cfg, mesh: Mesh) -> Any:
+    """KV/state caches: shard batch; heads on model when divisible.
+
+    Cache layouts (see models/transformer.py):
+      attn k/v:  (..., B, S, Hkv, hd) — batch on DP, Hkv on model if div.
+      rwkv S:    (..., B, H, hd, hd)  — batch on DP, H on model if div.
+      states:    (..., B, d)          — batch on DP.
+    ``...`` = optional leading layer-stack axes.
+    """
+    dp = data_axes(mesh)
+    dp_entry = dp if len(dp) > 1 else dp[0]
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def visit(path, leaf):
+        keys = [p.key if hasattr(p, "key") else str(p) for p in path]
+        leafname = keys[-1]
+        nd = len(leaf.shape)
+        if leafname == "pos":
+            return P()
+        spec = [None] * nd
+
+        def set_batch(i):
+            if leaf.shape[i] % dp_size == 0 and leaf.shape[i] >= dp_size:
+                spec[i] = dp_entry
+
+        if leafname in ("k", "v", "self_k", "self_v", "cross_k", "cross_v"):
+            b_dim = nd - 4
+            s_dim = nd - 3
+            h_dim = nd - 2
+            set_batch(b_dim)
+            if cfg.n_kv_heads and leaf.shape[h_dim] % mesh.shape["model"] == 0 \
+                    and leaf.shape[h_dim] >= mesh.shape["model"]:
+                spec[h_dim] = "model"
+            elif leaf.shape[s_dim] % mesh.shape["model"] == 0 \
+                    and leaf.shape[s_dim] >= mesh.shape["model"]:
+                # context parallelism: GQA/MQA archs whose few KV heads
+                # cannot split over TP shard the cache on SEQUENCE instead —
+                # decode attention renormalizes online-softmax partials with
+                # O(B·H) collectives while cache reads divide by TP degree
+                # (measured −65% memory term on granite decode, §Perf C)
+                spec[s_dim] = "model"
+            return P(*spec)
+        if leafname == "S":  # rwkv6 state (..., B, H, hd, hd)
+            set_batch(nd - 4)
+            if leaf.shape[nd - 3] % mesh.shape["model"] == 0:
+                spec[nd - 3] = "model"
+            return P(*spec)
+        if leafname in ("tm_shift", "cm_shift", "h"):  # (..., B, d)
+            set_batch(nd - 2)
+            return P(*spec)
+        if leafname == "conv":  # (..., B, cw-1, d)
+            set_batch(nd - 3)
+            return P(*spec)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(visit, cache)
+
+
+def opt_state_specs(param_spec_tree: Any, params: Any = None,
+                    mesh: Optional[Mesh] = None) -> Any:
+    """Optimizer-state specs: ZeRO-1 when shapes+mesh are given.
+
+    mu/nu start from each parameter's spec (TP), then additionally shard
+    the largest still-unsharded dim over the DP axes when divisible —
+    the f32 moments are 4× the bf16 params and do NOT participate in the
+    forward pass, so replicating them across data (what plain mirroring
+    does) wastes the dominant slice of HBM.  XLA inserts the ZeRO
+    reduce-scatter/all-gather pair around the update automatically.
+    """
+    from jax.sharding import PartitionSpec
+
+    if params is None or mesh is None:
+        return {"mu": param_spec_tree, "nu": param_spec_tree,
+                "step": PartitionSpec()}
+
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    dp_entry = dp if len(dp) > 1 else dp[0]
+
+    def widen(spec, leaf):
+        spec_t = tuple(spec) + (None,) * (len(leaf.shape) - len(tuple(spec)))
+        flat = []
+        for s in spec_t:
+            flat.extend(s if isinstance(s, tuple) else (s,))
+        if any(a in flat for a in dp):
+            return P(*spec_t)  # already DP-sharded (FSDP params)
+        dims = sorted(range(len(leaf.shape)),
+                      key=lambda i: -leaf.shape[i])
+        for i in dims:
+            if spec_t[i] is None and leaf.shape[i] % dp_size == 0 \
+                    and leaf.shape[i] >= dp_size:
+                out = list(spec_t)
+                out[i] = dp_entry
+                return P(*out)
+        return P(*spec_t)
+
+    moment_specs = jax.tree_util.tree_map(
+        widen, param_spec_tree, params,
+        is_leaf=lambda x: isinstance(x, P))
+    return {"mu": moment_specs, "nu": moment_specs, "step": PartitionSpec()}
+
+
+def _context_mesh() -> Optional[Mesh]:
+    """The mesh from an enclosing ``with mesh:`` block, or None."""
+    try:
+        from jax._src.mesh import thread_resources
+
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def maybe_shard(x: jax.Array, *axes) -> jax.Array:
+    """Sharding constraint by trailing-dim axis names, no-op off-mesh.
+
+    ``axes`` gives one entry per dim: an axis name, a tuple of names, "dp"
+    (expands to the mesh's DP axes), or None.  A dim is constrained only if
+    its size divides the named axis product — otherwise left to GSPMD.
+    """
+    mesh = _context_mesh()
+    if mesh is None:
+        return x
+    spec = []
+    for dim, ax in zip(x.shape, axes):
+        if ax is None:
+            spec.append(None)
+            continue
+        if ax == "dp":
+            names = data_axes(mesh)
+            ax = names if len(names) > 1 else names[0]
+        sz = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            if a not in mesh.axis_names:
+                sz = 0
+                break
+            sz *= mesh.shape[a]
+        if sz and dim % sz == 0:
+            spec.append(ax)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def shard_zero1(tree: Any) -> Any:
+    """ZeRO-style constraint: shard each leaf's largest un-sharded dim over
+    the DP axes (divisibility-checked).  No-op off-mesh.  Used for the f32
+    gradient accumulator so it is reduce-scattered per microbatch instead
+    of living replicated (ZeRO-2 behaviour under pjit)."""
+    mesh = _context_mesh()
+    if mesh is None:
+        return tree
+    dp = data_axes(mesh)
+    if not dp:
+        return tree
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    dp_entry = dp if len(dp) > 1 else dp[0]
+
+    def one(x):
+        if not hasattr(x, "shape") or x.ndim == 0:
+            return x
+        dims = sorted(range(x.ndim), key=lambda i: -x.shape[i])
+        for i in dims:
+            if x.shape[i] % dp_size == 0 and x.shape[i] >= dp_size:
+                spec = [None] * x.ndim
+                spec[i] = dp_entry
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(*spec)))
+        return x
+
+    return jax.tree_util.tree_map(one, tree)
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the Amber Pruner hot paths.
+
+  nm_prune         — fused scoring + per-token N:M top-k + mask (1 HBM pass)
+  nm_spmm          — tile-consensus compacted matmul (the TPU-native SpMM)
+  w8a8_matmul      — int8×int8→int32 GEMM with SmoothQuant dequant
+  flash_attention  — causal online-softmax attention, VMEM score tiles
+                     (kills the O(T·S) HBM score traffic that dominates the
+                     32k-prefill memory roofline term)
+
+``ops``  — jit'd wrappers (batched, padded, interpret-mode switch)
+``ref``  — pure-jnp oracles used by the allclose test sweeps
+"""
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ops import nm_prune, nm_spmm, w8a8_matmul
+
+__all__ = ["nm_prune", "nm_spmm", "w8a8_matmul", "flash_attention_pallas"]

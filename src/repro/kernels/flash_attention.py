@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: causal flash attention (online softmax, VMEM tiles).
+
+Why it exists here: the exact-roofline pass (EXPERIMENTS.md §Roofline)
+shows every 32k prefill/train cell is MEMORY-bound, and the dominant
+traffic is the O(T·S) f32 score/probability tensors the jnp online-softmax
+attention materializes in HBM at every chunk (fusion cannot keep a dot's
+output resident on CPU/TPU XLA).  Flash attention keeps the (bt × bk)
+score tile in VMEM/registers: HBM traffic drops from O(T·S) to
+O(T·S/bt · d) operand reads — i.e. the memory term collapses to operand
+streaming (napkin math in §Perf A, iteration A4).
+
+Layout: q (B, H, T, d), k/v (B, H, S, d); grid (B·H, T/bt, S/bk) with the
+KV-block axis innermost; scratch (m, l, acc) carries the running softmax
+state across KV blocks; finalization divides on the last block.  Causal
+masking by absolute block offsets.  MXU alignment: bt, bk multiples of
+128 on real hardware (any value in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            n_kv: int, bq: int, bk: int, causal: bool, scale: float,
+            window: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block-level band check: a KV block entirely outside
+    # (q_lo − window, q_hi] contributes nothing — skip its matmuls (on TPU
+    # Mosaic this prunes the MXU work, making SWA prefill O(T·window))
+    q_lo, q_hi = qi * bq, qi * bq + bq - 1
+    k_lo, k_hi = ki * bk, ki * bk + bk - 1
+    visible = jnp.bool_(True)
+    if causal:
+        visible = visible & (k_lo <= q_hi)
+    if window > 0:
+        visible = visible & (k_hi > q_lo - window)
+
+    @pl.when(visible)
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        if causal:
+            s = jnp.where(k_pos <= q_pos, s, _NEG)
+        if window > 0:
+            s = jnp.where(k_pos > q_pos - window, s, _NEG)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(s > _NEG / 2, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention_pallas(
+    q: jax.Array,                 # (B, H, T, d)
+    k: jax.Array,                 # (B, H, S, d)
+    v: jax.Array,                 # (B, H, S, d)
+    causal: bool = True,
+    window: int = 0,              # >0 → sliding-window (SWA/local) band
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,       # CPU container default
+) -> jax.Array:
+    b, h, t, d = q.shape
+    s = k.shape[2]
+    bq = min(block_q, t)
+    bk = min(block_k, s)
+    assert t % bq == 0 and s % bk == 0, (t, s, bq, bk)
+    n_kv = s // bk
+    scale = d**-0.5
+
+    qf = q.reshape(b * h, t, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_kv=n_kv, bq=bq, bk=bk, causal=causal,
+                          scale=scale, window=window),
+        grid=(b * h, t // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, t, d)

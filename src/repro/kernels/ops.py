@@ -1,0 +1,106 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only; on a
+real TPU deployment set ``REPRO_PALLAS_INTERPRET=0`` (or pass
+``interpret=False``) and the same BlockSpecs compile to Mosaic.
+
+Wrappers handle leading-batch flattening and shape padding so callers can
+use them as drop-in linear ops.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.nm_prune import nm_prune_pallas
+from repro.kernels.nm_spmm import nm_spmm_pallas
+from repro.kernels.w8a8_matmul import w8a8_matmul_pallas
+
+__all__ = ["nm_prune", "nm_spmm", "w8a8_matmul", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def _flatten(x: jax.Array):
+    lead = x.shape[:-1]
+    t = 1
+    for s in lead:
+        t *= s
+    return x.reshape(t, x.shape[-1]), lead
+
+
+def nm_prune(
+    x: jax.Array,
+    scale: Optional[jax.Array],
+    n: int,
+    m: int,
+    block_t: int = 256,
+    block_d: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused Amber prune over any (..., D) tensor."""
+    interpret = default_interpret() if interpret is None else interpret
+    xf, lead = _flatten(x)
+    t, d = xf.shape
+    bt = _largest_divisor(t, block_t)
+    bd = _largest_divisor(d, block_d, multiple_of=m)
+    y = nm_prune_pallas(xf, scale, n, m, block_t=bt, block_d=bd,
+                        interpret=interpret)
+    return y.reshape(*lead, d)
+
+
+def nm_spmm(
+    x: jax.Array,
+    w: jax.Array,
+    scale: Optional[jax.Array],
+    n: int,
+    m: int,
+    tile: int = 256,
+    block_o: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Tile-consensus compacted matmul over any (..., D) input."""
+    interpret = default_interpret() if interpret is None else interpret
+    xf, lead = _flatten(x)
+    t, d = xf.shape
+    n_out = w.shape[-1]
+    bt = _largest_divisor(t, tile)
+    bo = _largest_divisor(n_out, block_o)
+    y = nm_spmm_pallas(xf, w, scale, n, m, block_t=bt, block_o=bo,
+                       interpret=interpret)
+    return y.reshape(*lead, n_out)
+
+
+def w8a8_matmul(
+    xq: jax.Array,
+    wq: jax.Array,
+    x_scale: jax.Array,
+    w_scale: jax.Array,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interpret = default_interpret() if interpret is None else interpret
+    xf, lead = _flatten(xq)
+    t, d = xf.shape
+    n_out = wq.shape[-1]
+    bt = _largest_divisor(t, 256)
+    bo = _largest_divisor(n_out, 256)
+    bk = _largest_divisor(d, 512)
+    y = w8a8_matmul_pallas(xf, wq, x_scale, w_scale, block_t=bt, block_o=bo,
+                           block_k=bk, interpret=interpret)
+    return y.reshape(*lead, n_out)
+
+
+def _largest_divisor(total: int, target: int, multiple_of: int = 1) -> int:
+    """Largest divisor of ``total`` that is ≤ target and a multiple of
+    ``multiple_of`` (falls back to ``multiple_of`` blocks)."""
+    best = multiple_of
+    for cand in range(min(target, total), multiple_of - 1, -1):
+        if total % cand == 0 and cand % multiple_of == 0:
+            best = cand
+            break
+    return max(best, 1)

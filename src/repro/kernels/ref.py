@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["nm_prune_ref", "nm_spmm_ref", "w8a8_matmul_ref",
+           "flash_attention_ref"]
+
+
+def flash_attention_ref(
+    q: jax.Array,                      # (B, H, T, d)
+    k: jax.Array,                      # (B, H, S, d)
+    v: jax.Array,                      # (B, H, S, d)
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    """Dense softmax attention oracle (f32 math; window>0 → SWA band)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * d**-0.5
+    t_len, s_len = s.shape[-2:]
+    q_pos = jnp.arange(t_len)[:, None] + (s_len - t_len)
+    k_pos = jnp.arange(s_len)[None, :]
+    mask = jnp.ones((t_len, s_len), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window > 0:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def nm_prune_ref(
+    x: jax.Array,                      # (T, D)
+    scale: Optional[jax.Array],        # (D,) or None
+    n: int,
+    m: int,
+) -> jax.Array:
+    """Fused Amber prune: score → per-token N:M top-k mask → apply."""
+    from repro.core import nm, scoring
+
+    scores = scoring.score_activations(x, scale)
+    return nm.apply_nm(x, scores, n, m)
+
+
+def nm_spmm_ref(
+    x: jax.Array,                      # (T, D) — T divisible by tile
+    w: jax.Array,                      # (D, N_out)
+    scale: Optional[jax.Array],        # (D,) or None
+    n: int,
+    m: int,
+    tile: int,
+) -> jax.Array:
+    """Tile-consensus N:M compacted matmul (DESIGN.md §2).
+
+    Per token tile: pool scores with an L2 norm over the tile, keep the
+    top-N channels of every group of M (shared across the tile), contract
+    only the survivors.
+    """
+    from repro.core import nm, scoring
+
+    t, d = x.shape
+    assert t % tile == 0, (t, tile)
+    xt = x.reshape(t // tile, tile, d)
+
+    def one(xtile):
+        s = scoring.score_activations(xtile, scale)
+        chans = nm.tile_consensus_channels(s, n, m)
+        xc = nm.compact_columns(xtile, chans)
+        wc = jnp.take(w, chans.reshape(-1), axis=0)
+        return jnp.dot(xc, wc, preferred_element_type=jnp.float32)
+
+    y = jax.vmap(one)(xt)
+    return y.reshape(t, w.shape[-1]).astype(x.dtype)
+
+
+def w8a8_matmul_ref(
+    xq: jax.Array,                     # (T, D) int8
+    wq: jax.Array,                     # (D, N_out) int8
+    x_scale: jax.Array,                # scalar f32
+    w_scale: jax.Array,                # (N_out,) f32
+) -> jax.Array:
+    acc = jax.lax.dot_general(
+        xq, wq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    return acc.astype(jnp.float32) * x_scale * w_scale

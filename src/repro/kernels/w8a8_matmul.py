@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: W8A8 int8 matmul with per-channel dequant.
+
+The Outstanding-sparse runtime GEMM: int8 × int8 → int32 accumulation on
+the MXU, dequantized on the way out with the static per-tensor activation
+scale and per-output-channel weight scales (SmoothQuant rewrite done
+offline in ``repro/core/quant.py``).
+
+Classic 3D matmul grid (T/bt, N/bo, D/bk) with an int32 VMEM accumulator
+scratch; the dequant multiply happens once, on the final reduction step —
+int8 tiles stream through VMEM at half the bf16 footprint, doubling
+effective HBM bandwidth (the reason W8A8 helps decode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["w8a8_matmul_pallas"]
+
+
+def _kernel(x_ref, w_ref, ws_ref, xs_ref, o_ref, acc_ref, *, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _finish():
+        x_scale = xs_ref[0]
+        w_scale = ws_ref[...].astype(jnp.float32)
+        o_ref[...] = (
+            acc_ref[...].astype(jnp.float32) * x_scale * w_scale[None, :]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_o", "block_k",
+                                             "interpret"))
+def w8a8_matmul_pallas(
+    xq: jax.Array,                      # (T, D) int8
+    wq: jax.Array,                      # (D, N_out) int8
+    x_scale: jax.Array,                 # scalar f32
+    w_scale: jax.Array,                 # (N_out,) f32
+    block_t: int = 256,
+    block_o: int = 256,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    t, d = xq.shape
+    n_out = wq.shape[-1]
+    bt, bo, bk = min(block_t, t), min(block_o, n_out), min(block_k, d)
+    assert t % bt == 0 and n_out % bo == 0 and d % bk == 0
+    k_steps = d // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps),
+        grid=(t // bt, n_out // bo, k_steps),
+        in_specs=[
+            pl.BlockSpec((bt, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bo), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bo,), lambda i, j, k: (j,)),
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, bo), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n_out), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bt, bo), jnp.int32)],
+        interpret=interpret,
+    )(xq, wq, w_scale, x_scale.reshape(1))

@@ -1,0 +1,180 @@
+"""Dry-run cell construction: (arch × shape) → lowered-compilable closure.
+
+``build_cell`` assembles, for one architecture and one input-shape cell:
+  * the step function (train_step / prefill_step / serve_step),
+  * ShapeDtypeStruct stand-ins for every argument (zero allocation),
+  * in/out shardings from the partition rules,
+so the dry-run is exactly ``jax.jit(fn, ...).lower(*specs).compile()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell, SHAPE_CELLS, get_config
+from repro.core.policy import DENSE, SparsityPolicy, paper_policy
+from repro.distributed import sharding as shd
+from repro.models import build_model
+from repro.train.optimizer import OptConfig, adamw_init
+from repro.train.train_step import make_train_step
+
+__all__ = ["Cell", "build_cell", "input_specs", "cell_by_name", "is_runnable"]
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    cfg: ModelConfig
+    shape: ShapeCell
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+    def lower(self, mesh: Mesh):
+        with mesh:
+            jitted = jax.jit(
+                self.fn,
+                in_shardings=self.in_shardings,
+                out_shardings=self.out_shardings,
+                donate_argnums=self.donate_argnums,
+            )
+            return jitted.lower(*self.args)
+
+
+def cell_by_name(name: str) -> ShapeCell:
+    for c in SHAPE_CELLS:
+        if c.name == name:
+            return c
+    raise KeyError(name)
+
+
+def is_runnable(cfg: ModelConfig, shape: ShapeCell) -> Tuple[bool, str]:
+    """long_500k requires sub-quadratic attention (DESIGN.md §5)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch at 524k context (skip per spec)"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the model inputs of one cell."""
+    b = shape.global_batch
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, shape.seq_len + 1), i32)}
+    elif shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, shape.seq_len), i32)}
+    else:  # decode: one new token against a seq_len-deep cache
+        batch = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.is_encdec and shape.kind != "decode":
+        batch["frame_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), bf16)
+    if cfg.vision_stub and shape.kind != "decode":
+        batch["pixel_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_patches, cfg.d_model), bf16)
+    return batch
+
+
+def _batch_shardings(batch: Dict[str, Any], mesh: Mesh) -> Dict[str, Any]:
+    bs = shd.batch_spec(mesh)
+    dp_size = 1
+    for a in shd.data_axes(mesh):
+        dp_size *= mesh.shape[a]
+    out = {}
+    for k, v in batch.items():
+        spec = [None] * len(v.shape)
+        if v.shape[0] % dp_size == 0 and v.shape[0] >= dp_size:
+            spec[0] = bs[0]
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def _abstract_params(model) -> Any:
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    policy: Optional[SparsityPolicy] = None,
+    cfg: Optional[ModelConfig] = None,
+    grad_accum: int = 16,
+) -> Cell:
+    cfg = cfg or get_config(arch)
+    shape = cell_by_name(shape_name)
+    ok, why = is_runnable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{arch} × {shape_name} not runnable: {why}")
+    if policy is None:
+        # paper-faithful baseline: Amber-P 8:16 with the published skip list
+        policy = paper_policy(8, 16, qgate_skip_layers=cfg.qgate_skip_layers)
+    model = build_model(cfg)
+
+    params = _abstract_params(model)
+    # train: FSDP (ZeRO-3) param sharding — multi-B-param training cannot
+    # fit TP-only on 16 GB chips; inference: TP-only (no per-step gathers)
+    pspecs = shd.param_specs(params, mesh, cfg.n_experts,
+                             fsdp=(shape.kind == "train"))
+    pshard = shd.named(mesh, pspecs)
+    batch = input_specs(cfg, shape)
+    bshard = _batch_shardings(batch, mesh)
+
+    if shape.kind == "train":
+        opt = jax.eval_shape(adamw_init, params)
+        oshard = shd.named(mesh, shd.opt_state_specs(pspecs, params, mesh))
+        # training runs dense by default (the paper confines sparsity to
+        # prefill); pass a policy with phases=("train",) for ablations.
+        # grad_accum microbatches bound activation memory AND let XLA
+        # overlap each microbatch's DP reduce with the next one's compute.
+        # the microbatch must stay divisible by the DP degree.
+        dp_size = 1
+        for a in shd.data_axes(mesh):
+            dp_size *= mesh.shape[a]
+        ga = max(grad_accum, 1)
+        while ga > 1 and (shape.global_batch % ga != 0
+                          or (shape.global_batch // ga) % dp_size != 0):
+            ga -= 1
+        step = make_train_step(model, OptConfig(), policy, grad_accum=ga)
+        return Cell(
+            arch=arch, cfg=cfg, shape=shape, fn=step,
+            args=(params, opt, batch),
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1),
+        )
+
+    cache = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    cshard = shd.named(mesh, shd.cache_specs(cache, cfg, mesh))
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch, cache):
+            return model.prefill(params, batch, cache, policy=policy)
+
+        return Cell(
+            arch=arch, cfg=cfg, shape=shape, fn=prefill_step,
+            args=(params, batch, cache),
+            in_shardings=(pshard, bshard, cshard),
+            out_shardings=(None, cshard),
+            donate_argnums=(2,),
+        )
+
+    # decode: cache is pre-filled to seq_len-1; one serve step
+    def serve_step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache, policy=policy)
+
+    tshard = bshard["tokens"]
+    return Cell(
+        arch=arch, cfg=cfg, shape=shape, fn=serve_step,
+        args=(params, batch["tokens"], cache),
+        in_shardings=(pshard, tshard, cshard),
+        out_shardings=(None, cshard),
+        donate_argnums=(2,),
+    )

@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        [--arch mixtral_8x7b] [--shape train_4k] [--multi-pod|--both] \
+        [--json out.json]
+
+For each cell this prints memory_analysis() (fits?) and cost_analysis()
+(FLOPs/bytes for §Roofline), plus the parsed collective traffic.  Compile
+failures (sharding mismatch, OOM, unsupported collective) are bugs and are
+reported with a non-zero exit code.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, policy=None):
+    import jax
+    from repro.configs.base import get_config
+    from repro.launch import roofline
+    from repro.launch.cells import build_cell, cell_by_name, is_runnable
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    shape = cell_by_name(shape_name)
+    ok, why = is_runnable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "why": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = build_cell(arch, shape_name, mesh, policy=policy)
+    t0 = time.time()
+    with mesh:
+        lowered = cell.lower(mesh)
+        compiled = lowered.compile()
+    dt = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    # CPU-backend artifact correction (see EXPERIMENTS.md §Dry-run): XLA's
+    # CPU float-normalization pass upcasts every bf16 weight to f32 and
+    # LICM hoists those converts out of the layer loop as whole-stack
+    # copies (~2× the TP-sharded param bytes, verified in the buffer
+    # dumps).  TPU executes bf16 natively — no such copies exist there.
+    import jax as _jax
+    from repro.distributed import sharding as _shd
+    from repro.models import build_model as _bm
+    from repro.train.optimizer import adamw_init as _ai
+    _params = _jax.eval_shape(_bm(cfg).init, _jax.random.PRNGKey(0))
+    _specs = _shd.param_specs(_params, mesh, cfg.n_experts)
+    tp_param_bytes = 0
+    for leaf, spec in zip(_jax.tree_util.tree_leaves(_params),
+                          _jax.tree_util.tree_leaves(
+                              _specs, is_leaf=lambda x: isinstance(
+                                  x, _jax.sharding.PartitionSpec))):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        shard = 1
+        for ax in spec:
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                shard *= mesh.shape[a]
+        tp_param_bytes += n * leaf.dtype.itemsize // max(shard, 1)
+    artifact = 2 * tp_param_bytes
+    total_mem = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + ma.temp_size_in_bytes)
+    tpu_native_est = max(total_mem - artifact, ma.argument_size_in_bytes)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    rep = roofline.analyze(arch, shape_name, mesh_name, compiled, cfg,
+                           shape.kind, tokens)
+    n_dev = mesh.size
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "status": "ok",
+        "compile_s": round(dt, 1),
+        "bytes_per_device": {
+            "args": int(ma.argument_size_in_bytes),
+            "output": int(ma.output_size_in_bytes),
+            "temp": int(ma.temp_size_in_bytes),
+            "total": int(total_mem),
+            "cpu_f32_artifact_est": int(artifact),
+            "tpu_native_est": int(tpu_native_est),
+        },
+        "flops_per_device": rep.flops_per_dev,
+        "hbm_bytes_per_device": rep.bytes_per_dev,
+        "collective_bytes_per_device": rep.coll_bytes_per_dev,
+        "roofline_s": {
+            "compute": rep.compute_s,
+            "memory": rep.memory_s,
+            "collective": rep.collective_s,
+        },
+        "dominant": rep.dominant,
+        "model_flops": rep.model_flops_total,
+        "useful_flops_ratio": rep.model_flops_total / max(
+            rep.flops_per_dev * n_dev, 1.0),
+    }
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape cell (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true",
+                    help="run 16x16 AND 2x16x16 meshes")
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    ap.add_argument("--tile-consensus", action="store_true",
+                    help="use the TPU-native compacted-matmul sparsity mode")
+    args = ap.parse_args(argv)
+
+    from repro.configs.base import ARCH_IDS, SHAPE_CELLS
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else [c.name for c in SHAPE_CELLS]
+    meshes = [False, True] if args.both else [args.multi_pod]
+
+    policy = None
+    if args.tile_consensus:
+        from repro.core.policy import paper_policy
+        policy = paper_policy(8, 16, tile_consensus=True)
+
+    results = []
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+                try:
+                    r = run_cell(arch, shape, mp, policy=policy)
+                except Exception as e:
+                    traceback.print_exc()
+                    r = {"arch": arch, "shape": shape,
+                         "mesh": "2x16x16" if mp else "16x16",
+                         "status": "FAIL", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                results.append(r)
+                status = r["status"]
+                if status == "ok":
+                    rf = r["roofline_s"]
+                    print(f"[dryrun] {tag}: OK compile={r['compile_s']}s "
+                          f"mem/dev={r['bytes_per_device']['total']/2**30:.2f}GiB "
+                          f"(tpu-est {r['bytes_per_device']['tpu_native_est']/2**30:.2f}) "
+                          f"compute={rf['compute']:.3e}s "
+                          f"memory={rf['memory']:.3e}s "
+                          f"coll={rf['collective']:.3e}s "
+                          f"dom={r['dominant']}", flush=True)
+                elif status == "skipped":
+                    print(f"[dryrun] {tag}: SKIP ({r['why']})", flush=True)
+                else:
+                    print(f"[dryrun] {tag}: FAIL {r['error']}", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+    print(f"[dryrun] done: {sum(r['status']=='ok' for r in results)} ok, "
+          f"{sum(r['status']=='skipped' for r in results)} skipped, "
+          f"{failures} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

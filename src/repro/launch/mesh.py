@@ -1,0 +1,32 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Built as FUNCTIONS so importing this module never touches jax device
+state — the 512-device dry-run sets XLA_FLAGS before the first jax init
+and only then calls these.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) single pod = 256 chips; (2, 16, 16) = 2 pods / 512 chips.
+
+    Axes: DP over ("pod", "data") — gradient/batch parallelism, hierarchical
+    reduce (intra-pod reduce-scatter, inter-pod all-reduce chosen by XLA
+    from the mesh nesting) — and TP over "model".
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh():
+    """1×1 mesh over whatever single device the host has (tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (n, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,81 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+# ^ must precede any jax import (see dryrun.py)
+
+"""Perf-iteration harness: A/B roofline comparison of cell variants.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch qwen2_5_32b \
+        --shape prefill_32k --variants dense,per_token,tile_consensus
+
+Each variant re-lowers + re-compiles the cell and prints the three
+roofline terms, so a hypothesis → change → measure cycle is one command.
+Variants:
+  dense           no sparsity (pure baseline)
+  per_token       paper-faithful Amber 8:16 (per-token masks, dense GEMMs)
+  tile_consensus  TPU-native compacted matmul 8:16 ((M/N)× GEMM cut)
+  per_token_24 / tile_consensus_24   same at 2:4
+  w8a8            per-tensor int8 weights estimate (memory-term lever —
+                  modeled: bytes_accessed × param-read fraction ÷ 2)
+"""
+import argparse
+import json
+
+
+def variant_policy(name: str, cfg):
+    from repro.core.policy import DENSE, paper_policy
+
+    if name == "dense":
+        return DENSE
+    if name == "per_token":
+        return paper_policy(8, 16, cfg.qgate_skip_layers)
+    if name == "tile_consensus":
+        return paper_policy(8, 16, cfg.qgate_skip_layers,
+                            tile_consensus=True)
+    if name == "per_token_24":
+        return paper_policy(2, 4, cfg.qgate_skip_layers)
+    if name == "tile_consensus_24":
+        return paper_policy(2, 4, cfg.qgate_skip_layers, tile_consensus=True)
+    raise ValueError(name)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="dense,per_token,tile_consensus")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.launch.dryrun import run_cell
+
+    results = []
+    base = None
+    for v in args.variants.split(","):
+        from repro.configs.base import get_config
+        pol = variant_policy(v, get_config(args.arch))
+        r = run_cell(args.arch, args.shape, args.multi_pod, policy=pol)
+        r["variant"] = v
+        results.append(r)
+        rf = r["roofline_s"]
+        line = (f"{v:18s} compute={rf['compute']:.3e} "
+                f"memory={rf['memory']:.3e} coll={rf['collective']:.3e} "
+                f"dom={r['dominant']}")
+        if base is not None:
+            brf = base["roofline_s"]
+            line += ("   Δ vs dense: "
+                     f"compute×{rf['compute']/max(brf['compute'],1e-30):.2f} "
+                     f"memory×{rf['memory']/max(brf['memory'],1e-30):.2f} "
+                     f"coll×{rf['collective']/max(brf['collective'],1e-30):.2f}")
+        else:
+            base = r
+        print(line, flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,57 @@
+"""Render dryrun_results.json into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m repro.launch.report dryrun_results.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def render(results, mesh="16x16"):
+    rows = [r for r in results if r.get("mesh") == mesh]
+    out = []
+    out.append(
+        "| arch | shape | status | mem/dev GiB (tpu-est) | compute s | "
+        "memory s | collective s | dominant | MODEL_FLOPS | useful ratio |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP ({r['why']}) "
+                       f"| — | — | — | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | — | — | — "
+                       f"| — | — | — | — |")
+            continue
+        b = r["bytes_per_device"]
+        rf = r["roofline_s"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | "
+            f"{fmt_bytes(b['total'])} ({fmt_bytes(b['tpu_native_est'])}) | "
+            f"{rf['compute']:.3e} | {rf['memory']:.3e} | "
+            f"{rf['collective']:.3e} | **{r['dominant']}** | "
+            f"{r['model_flops']:.2e} | {r['useful_flops_ratio']:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    with open(path) as f:
+        results = json.load(f)
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n### Mesh {mesh}\n")
+        print(render(results, mesh))
+    ok = sum(r["status"] == "ok" for r in results)
+    skip = sum(r["status"] == "skipped" for r in results)
+    fail = len(results) - ok - skip
+    print(f"\ncells: {ok} ok / {skip} skipped / {fail} failed "
+          f"(of {len(results)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+TPU v5e constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Terms (per device — post-SPMD HLO shapes are per-device):
+  compute    = flops / peak_flops
+  memory     = bytes_accessed / hbm_bw
+  collective = ring-model traffic of every all-gather / all-reduce /
+               reduce-scatter / all-to-all / collective-permute parsed from
+               the compiled HLO text / link_bw
+
+``cost_analysis()`` provides flops & bytes; collective bytes are NOT in it,
+so we regex the per-op result shapes out of the HLO and apply ring-cost
+factors (all-reduce 2×result, all-gather 1×result, reduce-scatter
+(g-1)×result, all-to-all 1×, permute 1×).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+__all__ = ["HW", "RooflineReport", "analyze", "collective_bytes",
+           "model_flops"]
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / ICI link
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    link_bw: float = LINK_BW
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0,
+}
+
+# e.g.  %all-reduce.5 = f32[8,128]{1,0} all-reduce(
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    if dtype not in _DTYPE_BYTES:
+        return 0.0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Ring-model per-device traffic by collective kind, from HLO text."""
+    out: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        size = _shape_bytes(dtype, dims)
+        # group size for reduce-scatter scaling
+        g = 2
+        gm = _GROUPS_RE.search(hlo_text, m.end(), m.end() + 2000)
+        if gm:
+            g = len(gm.group(1).split(","))
+        factor = {
+            "all-reduce": 2.0,
+            "all-gather": 1.0,
+            "reduce-scatter": float(max(g - 1, 1)),
+            "all-to-all": 1.0,
+            "collective-permute": 1.0,
+        }[kind]
+        out[kind] = out.get(kind, 0.0) + size * factor
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def model_flops(cfg, tokens: int, kind: str) -> float:
+    """Analytic useful FLOPs: 6·N·D train / 2·N·D inference (N = active)."""
+    n = cfg.n_active_params() if cfg.n_experts else cfg.n_params()
+    per_tok = 6.0 if kind == "train" else 2.0
+    return per_tok * n * tokens
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_total: float
+    peak_mem_bytes: Optional[float] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops × n_devices) — remat/redundancy waste."""
+        return self.model_flops_total / max(self.flops_per_dev, 1.0)
+
+    def row(self, n_dev: int) -> str:
+        total_hlo = self.flops_per_dev * n_dev
+        useful = self.model_flops_total / max(total_hlo, 1.0)
+        frac = max(self.compute_s, 1e-30) / max(
+            self.compute_s + 0.0, 1e-30)
+        return (
+            f"{self.arch:24s} {self.shape:12s} {self.mesh:9s} "
+            f"{self.compute_s:10.3e} {self.memory_s:10.3e} "
+            f"{self.collective_s:10.3e} {self.dominant:10s} "
+            f"{useful:8.3f}"
+        )
+
+
+def analyze(
+    arch: str,
+    shape_name: str,
+    mesh_name: str,
+    compiled,
+    cfg,
+    kind: str,
+    tokens: int,
+    hw: HW = HW(),
+) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = collective_bytes(hlo)["total"]
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(ma.temp_size_in_bytes + ma.argument_size_in_bytes +
+                    ma.output_size_in_bytes)
+    except Exception:
+        pass
+    return RooflineReport(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name,
+        flops_per_dev=flops,
+        bytes_per_dev=bytes_acc,
+        coll_bytes_per_dev=coll,
+        compute_s=flops / hw.peak_flops,
+        memory_s=bytes_acc / hw.hbm_bw,
+        collective_s=coll / hw.link_bw,
+        model_flops_total=model_flops(cfg, tokens, kind),
+        peak_mem_bytes=mem,
+    )

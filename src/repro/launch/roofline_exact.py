@@ -1,0 +1,184 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+# ^ must precede any jax import (see dryrun.py)
+
+"""Exact roofline extraction: layer-axis extrapolation.
+
+XLA's HLO cost analysis counts a ``while`` body ONCE regardless of trip
+count, so the production lowering (layer scan + chunked attention +
+microbatch scan) under-reports FLOPs/bytes/collectives by the loop trips.
+This pass rebuilds each cell in an ANALYSIS configuration where every
+loop that matters is structurally removed:
+
+  * layers unrolled (``scan_layers=False``) at 1 and 2 periods,
+  * attention in a single chunk (``attn_chunk ≥ seq``  → trip-1 scans),
+  * ``grad_accum = 1``;
+
+then two-point-extrapolates every term over the layer axis:
+
+  slope = cost(2p) − cost(1p);  total = cost(1p) − slope + slope·P_full
+  (+ tail_layers/period_len · slope for non-multiple hybrids)
+
+Residual under-count: the RWKV6 time recurrence (a per-step scan whose
+state-update FLOPs are ~1% of the projection FLOPs at d=4096 — noted, not
+corrected).  Memory figures still come from the production dry-run
+(dryrun_results.json); this pass yields flops / bytes / collective terms.
+
+    PYTHONPATH=src python -m repro.launch.roofline_exact \
+        [--arch X] [--shape Y] [--json out.json] [--variant per_token|...]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import traceback
+
+
+def _analysis_cfg(cfg, n_periods: int, seq: int):
+    plen = len(cfg.block_pattern)
+    kw = dict(
+        n_layers=n_periods * plen,
+        scan_layers=False,
+        attn_chunk=max(seq, cfg.window + 8),
+    )
+    if cfg.is_encdec:
+        kw["n_encoder_layers"] = n_periods
+    return dataclasses.replace(cfg, **kw)
+
+
+def _cell_costs(arch, cfg, shape_name, mesh, policy):
+    """(flops, bytes, coll_bytes) per device for one lowered+compiled cell."""
+    from repro.launch import roofline
+    from repro.launch.cells import build_cell
+
+    cell = build_cell(arch, shape_name, mesh, policy=policy, cfg=cfg,
+                      grad_accum=1)
+    with mesh:
+        compiled = cell.lower(mesh).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = roofline.collective_bytes(compiled.as_text())["total"]
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            coll)
+
+
+def run_cell_exact(arch: str, shape_name: str, policy=None,
+                   multi_pod: bool = False):
+    from repro.configs.base import get_config
+    from repro.core.policy import paper_policy
+    from repro.launch import roofline
+    from repro.launch.cells import cell_by_name, is_runnable
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    shape = cell_by_name(shape_name)
+    ok, why = is_runnable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "why": why}
+    if policy is None:
+        policy = paper_policy(8, 16, qgate_skip_layers=())
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plen = len(cfg.block_pattern)
+    p_full, tail = divmod(cfg.n_layers, plen)
+
+    c1 = _cell_costs(arch, _analysis_cfg(cfg, 1, shape.seq_len),
+                     shape_name, mesh, policy)
+    c2 = _cell_costs(arch, _analysis_cfg(cfg, 2, shape.seq_len),
+                     shape_name, mesh, policy)
+    slope = tuple(b - a for a, b in zip(c1, c2))
+    enc_scale = 1.0
+    if cfg.is_encdec:
+        # enc+dec layers were varied together; both stacks have n_layers
+        pass
+    total = tuple(
+        max(a - s, 0.0) + s * (p_full + tail / plen)
+        for a, s in zip(c1, slope)
+    )
+    flops, bytes_acc, coll = total
+
+    hw = roofline.HW()
+    tokens = shape.global_batch * (
+        shape.seq_len if shape.kind != "decode" else 1)
+    n_dev = mesh.size
+    mf = roofline.model_flops(cfg, tokens, shape.kind)
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok",
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": coll,
+        "roofline_s": {
+            "compute": flops / hw.peak_flops,
+            "memory": bytes_acc / hw.hbm_bw,
+            "collective": coll / hw.link_bw,
+        },
+        "model_flops": mf,
+        "useful_flops_ratio": mf / max(flops * n_dev, 1.0),
+        "dominant": max(
+            (("compute", flops / hw.peak_flops),
+             ("memory", bytes_acc / hw.hbm_bw),
+             ("collective", coll / hw.link_bw)), key=lambda kv: kv[1])[0],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--variant", default="per_token",
+                    choices=["dense", "per_token", "tile_consensus"])
+    args = ap.parse_args(argv)
+
+    from repro.configs.base import ARCH_IDS, SHAPE_CELLS, get_config
+    from repro.core.policy import DENSE, paper_policy
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else [c.name for c in SHAPE_CELLS]
+
+    results = []
+    fails = 0
+    for arch in archs:
+        for shape in shapes:
+            cfgq = get_config(arch)
+            pol = {
+                "dense": DENSE,
+                "per_token": paper_policy(8, 16, cfgq.qgate_skip_layers),
+                "tile_consensus": paper_policy(
+                    8, 16, cfgq.qgate_skip_layers, tile_consensus=True),
+            }[args.variant]
+            tag = f"{arch} × {shape}"
+            try:
+                r = run_cell_exact(arch, shape, policy=pol,
+                                   multi_pod=args.multi_pod)
+            except Exception as e:
+                traceback.print_exc()
+                r = {"arch": arch, "shape": shape, "status": "FAIL",
+                     "error": str(e)[:200]}
+                fails += 1
+            r["variant"] = args.variant
+            results.append(r)
+            if r["status"] == "ok":
+                rf = r["roofline_s"]
+                print(f"[exact] {tag}: c={rf['compute']:.3e} "
+                      f"m={rf['memory']:.3e} x={rf['collective']:.3e} "
+                      f"dom={r['dominant']} useful={r['useful_flops_ratio']:.3f}",
+                      flush=True)
+            else:
+                print(f"[exact] {tag}: {r['status']} {r.get('why', r.get('error',''))}",
+                      flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,77 @@
+"""Serving driver: Amber-sparse prefill, dense decode, batched requests.
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch qwen2_7b --smoke --sparsity 8:16 --batch 4 --new-tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--sparsity", default="8:16")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_config, get_smoke_config
+    from repro.core.policy import DENSE, paper_policy
+    from repro.core.pruner import precompute_scales
+    from repro.models import build_model
+    from repro.serve.engine import ServeConfig, ServingEngine
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    n, m = (int(x) for x in args.sparsity.split(":"))
+    policy = paper_policy(n, m, cfg.qgate_skip_layers)
+    params = precompute_scales(params, policy)  # offline Robust-Norm scales
+
+    scfg = ServeConfig(max_seq=args.prompt_len + args.new_tokens + 8,
+                       temperature=args.temperature)
+    engine = ServingEngine(model, policy, scfg)
+    dense_engine = ServingEngine(model, DENSE, scfg)
+
+    batch = {
+        "tokens": jax.random.randint(
+            jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
+            cfg.vocab_size),
+    }
+    if cfg.is_encdec:
+        batch["frame_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.encoder_seq, cfg.d_model)).astype(jnp.bfloat16)
+    if cfg.vision_stub:
+        batch["pixel_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(3),
+            (args.batch, cfg.n_patches, cfg.d_model)).astype(jnp.bfloat16)
+
+    for name, eng in [("dense", dense_engine), (f"amber {n}:{m}", engine)]:
+        t0 = time.perf_counter()
+        out = eng.generate(params, batch, max_new_tokens=args.new_tokens)
+        out["tokens"].block_until_ready()
+        dt = time.perf_counter() - t0
+        print(f"[{name:>10s}] generated {out['tokens'].shape} in {dt:.2f}s; "
+              f"first row: {out['tokens'][0, :12].tolist()}")
+
+    agree = (dense_engine.generate(params, batch, max_new_tokens=args.new_tokens)
+             ["tokens"] == engine.generate(params, batch,
+                                           max_new_tokens=args.new_tokens)
+             ["tokens"]).mean()
+    print(f"greedy-decode agreement dense vs sparse-prefill: {float(agree):.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,3 @@
+from repro.layers.linear import dense_linear, init_linear, sparse_linear
+
+__all__ = ["dense_linear", "init_linear", "sparse_linear"]

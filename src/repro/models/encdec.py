@@ -1,0 +1,270 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed).
+
+The audio frontend is a STUB per the task spec: ``batch["frame_embeds"]``
+carries precomputed (B, encoder_seq, d_model) frame embeddings (what the
+two conv layers would produce).  Encoder = non-causal attention stack;
+decoder = causal self-attention + cross-attention + MLP, scan-stacked.
+
+Whisper's MLP is non-gated (fc1 → GELU → fc2); for the Amber policy we map
+fc1 → 'gate_proj' (selectively pruned) and fc2 → 'down_proj' (always
+pruned).  Cross-attention K/V projections run once per request over the
+encoder states and are cached — they map to 'k_proj'/'v_proj' (skipped).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import SparsityPolicy
+from repro.layers.linear import init_linear, sparse_linear
+from repro.models import common
+from repro.models.attention import attention
+
+__all__ = ["init_params", "forward", "init_cache", "prefill", "decode_step"]
+
+
+def _init_ff(cfg, rng, dtype):
+    r1, r2 = jax.random.split(rng)
+    return {
+        "gate_proj": init_linear(r1, cfg.d_model, cfg.d_ff, bias=True, dtype=dtype),
+        "down_proj": init_linear(r2, cfg.d_ff, cfg.d_model, bias=True, dtype=dtype),
+    }
+
+
+def _ff(x, p, policy, phase):
+    h = sparse_linear(x, p["gate_proj"], "gate_proj", policy, phase)
+    h = jax.nn.gelu(h)
+    return sparse_linear(h, p["down_proj"], "down_proj", policy, phase)
+
+
+def _init_attn(cfg, rng, dtype):
+    r = jax.random.split(rng, 4)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    return {
+        "q_proj": init_linear(r[0], d, qd, bias=True, dtype=dtype),
+        "k_proj": init_linear(r[1], d, kvd, dtype=dtype),
+        "v_proj": init_linear(r[2], d, kvd, bias=True, dtype=dtype),
+        "o_proj": init_linear(r[3], qd, d, bias=True, dtype=dtype),
+    }
+
+
+def _init_enc_block(cfg, rng, dtype):
+    r1, r2 = jax.random.split(rng)
+    return {
+        "ln1": common.init_norm(cfg.d_model, cfg.norm, dtype),
+        "attn": _init_attn(cfg, r1, dtype),
+        "ln2": common.init_norm(cfg.d_model, cfg.norm, dtype),
+        "ff": _init_ff(cfg, r2, dtype),
+    }
+
+
+def _init_dec_block(cfg, rng, dtype):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {
+        "ln1": common.init_norm(cfg.d_model, cfg.norm, dtype),
+        "self_attn": _init_attn(cfg, r1, dtype),
+        "ln_x": common.init_norm(cfg.d_model, cfg.norm, dtype),
+        "cross_attn": _init_attn(cfg, r2, dtype),
+        "ln2": common.init_norm(cfg.d_model, cfg.norm, dtype),
+        "ff": _init_ff(cfg, r3, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array) -> Dict:
+    dtype = common.dtype_of(cfg)
+    r = jax.random.split(rng, 5)
+    return {
+        "embed": common.init_embedding(r[0], cfg.vocab_size, cfg.d_model, dtype),
+        "enc_blocks": jax.vmap(lambda k: _init_enc_block(cfg, k, dtype))(
+            jax.random.split(r[1], cfg.n_encoder_layers)),
+        "enc_norm": common.init_norm(cfg.d_model, cfg.norm, dtype),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_block(cfg, k, dtype))(
+            jax.random.split(r[2], cfg.n_layers)),
+        "dec_norm": common.init_norm(cfg.d_model, cfg.norm, dtype),
+        "lm_head": init_linear(r[3], cfg.d_model, cfg.vocab_size, dtype=dtype),
+    }
+
+
+def _qkv(x, p, cfg, policy, phase, kv_x=None):
+    b, t, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    s = kv_x.shape[1]
+    q = sparse_linear(x, p["q_proj"], "q_proj", policy, phase)
+    k = sparse_linear(kv_x, p["k_proj"], "k_proj", policy, phase)
+    v = sparse_linear(kv_x, p["v_proj"], "v_proj", policy, phase)
+    return (q.reshape(b, t, cfg.n_heads, cfg.head_dim),
+            k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim),
+            v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim))
+
+
+def _encode(cfg, params, frame_embeds, policy, phase):
+    frame_embeds = frame_embeds.astype(params["enc_norm"]["w"].dtype)
+    b, s, d = frame_embeds.shape
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h = frame_embeds + common.sinusoidal_positions(pos, d).astype(frame_embeds.dtype)
+
+    def body(h_c, pp):
+        x = common.norm_apply(h_c, pp["ln1"], cfg.norm)
+        q, k, v = _qkv(x, pp["attn"], cfg, policy, phase)
+        o = attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+        o = sparse_linear(o.reshape(b, s, cfg.q_dim), pp["attn"]["o_proj"],
+                          "o_proj", policy, phase)
+        h_c = h_c + o
+        x2 = common.norm_apply(h_c, pp["ln2"], cfg.norm)
+        return h_c + _ff(x2, pp["ff"], policy, phase), None
+
+    if not cfg.scan_layers:  # analysis mode: exact per-layer cost accounting
+        for i in range(cfg.n_encoder_layers):
+            pp = jax.tree_util.tree_map(lambda x: x[i], params["enc_blocks"])
+            h, _ = body(h, pp)
+    else:
+        h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+    return common.norm_apply(h, params["enc_norm"], cfg.norm)
+
+
+def _decode_blocks(cfg, params, h, enc_out, policy, phase, cache, pos):
+    """Runs the decoder stack.  cache None → training path (full seq)."""
+    b, t, _ = h.shape
+
+    def body(h_c, xs):
+        pp, cc = xs if cache is not None else (xs, None)
+        x = common.norm_apply(h_c, pp["ln1"], cfg.norm)
+        q, k, v = _qkv(x, pp["self_attn"], cfg, policy, phase)
+        new_cc = {}
+        if cache is None:
+            o = attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+        elif t == 1:
+            ck = jax.lax.dynamic_update_slice_in_dim(cc["self_k"], k, pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cc["self_v"], v, pos, axis=1)
+            o = attention(q, ck, cv, causal=False, q_offset=pos,
+                          kv_len=pos + 1, chunk=cfg.attn_chunk)
+            new_cc.update(self_k=ck, self_v=cv)
+        else:  # prefill
+            o = attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+            ck = jax.lax.dynamic_update_slice_in_dim(cc["self_k"], k, 0, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cc["self_v"], v, 0, axis=1)
+            new_cc.update(self_k=ck, self_v=cv)
+        o = sparse_linear(o.reshape(b, t, cfg.q_dim), pp["self_attn"]["o_proj"],
+                          "o_proj", policy, phase)
+        h_c = h_c + o
+
+        # cross attention
+        xx = common.norm_apply(h_c, pp["ln_x"], cfg.norm)
+        if cache is not None and t == 1:
+            qx = sparse_linear(xx, pp["cross_attn"]["q_proj"], "q_proj",
+                               policy, phase)
+            qx = qx.reshape(b, t, cfg.n_heads, cfg.head_dim)
+            kx, vx = cc["cross_k"], cc["cross_v"]
+            new_cc.update(cross_k=kx, cross_v=vx)
+        else:
+            qx, kx, vx = _qkv(xx, pp["cross_attn"], cfg, policy, phase,
+                              kv_x=enc_out)
+            if cache is not None:
+                new_cc.update(cross_k=kx, cross_v=vx)
+        ox = attention(qx, kx, vx, causal=False, chunk=cfg.attn_chunk)
+        ox = sparse_linear(ox.reshape(b, t, cfg.q_dim),
+                           pp["cross_attn"]["o_proj"], "o_proj", policy, phase)
+        h_c = h_c + ox
+
+        x2 = common.norm_apply(h_c, pp["ln2"], cfg.norm)
+        h_c = h_c + _ff(x2, pp["ff"], policy, phase)
+        return h_c, (new_cc if cache is not None else None)
+
+    if cache is None:
+        if not cfg.scan_layers:
+            for i in range(cfg.n_layers):
+                pp = jax.tree_util.tree_map(lambda x: x[i],
+                                            params["dec_blocks"])
+                h, _ = body(h, pp)
+            return h, None
+
+        def body2(h_c, pp):
+            h_c, _ = body(h_c, pp)
+            return h_c, None
+        h, _ = jax.lax.scan(body2, h, params["dec_blocks"])
+        return h, None
+
+    if not cfg.scan_layers:
+        new_stack = cache["blocks"]
+        for i in range(cfg.n_layers):
+            pp = jax.tree_util.tree_map(lambda x: x[i], params["dec_blocks"])
+            cc = jax.tree_util.tree_map(lambda x: x[i], cache["blocks"])
+            h, cc_new = body(h, (pp, cc))
+            new_stack = jax.tree_util.tree_map(
+                lambda c, u: c.at[i].set(u.astype(c.dtype)), new_stack,
+                cc_new)
+        return h, new_stack
+
+    # cache rides in the carry (see models/transformer.py — avoids XLA-CPU
+    # hoisting a full f32 copy of an xs cache out of the layer loop)
+    def body3(carry, xs):
+        h_c, cs = carry
+        pp, idx = xs
+        cc = jax.tree_util.tree_map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, idx, 0, keepdims=False),
+            cs)
+        h_c, cc_new = body(h_c, (pp, cc))
+        cs = jax.tree_util.tree_map(
+            lambda c, u: jax.lax.dynamic_update_index_in_dim(
+                c, u.astype(c.dtype), idx, 0), cs, cc_new)
+        return (h_c, cs), None
+
+    (h, new_blocks), _ = jax.lax.scan(
+        body3, (h, cache["blocks"]),
+        (params["dec_blocks"], jnp.arange(params["dec_blocks"]["ln1"]["w"].shape[0])))
+    return h, new_blocks
+
+
+def _embed_dec(cfg, params, tokens, pos0):
+    b, t = tokens.shape
+    h = common.embed(tokens, params["embed"])
+    pos = pos0 + jnp.broadcast_to(jnp.arange(t), (b, t))
+    return h + common.sinusoidal_positions(pos, cfg.d_model).astype(h.dtype)
+
+
+def forward(cfg: ModelConfig, params, batch, *, policy: SparsityPolicy,
+            phase: str = "train") -> jax.Array:
+    enc_out = _encode(cfg, params, batch["frame_embeds"], policy, phase)
+    h = _embed_dec(cfg, params, batch["tokens"], 0)
+    h, _ = _decode_blocks(cfg, params, h, enc_out, policy, phase, None, 0)
+    h = common.norm_apply(h, params["dec_norm"], cfg.norm)
+    return h @ params["lm_head"]["w"]
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> Dict:
+    dtype = dtype or common.dtype_of(cfg)
+    kv = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    xkv = (batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim)
+
+    def one(_):
+        return {
+            "self_k": jnp.zeros(kv, dtype), "self_v": jnp.zeros(kv, dtype),
+            "cross_k": jnp.zeros(xkv, dtype), "cross_v": jnp.zeros(xkv, dtype),
+        }
+
+    return {"blocks": jax.vmap(one)(jnp.arange(cfg.n_layers)),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(cfg: ModelConfig, params, batch, cache, *, policy):
+    enc_out = _encode(cfg, params, batch["frame_embeds"], policy, "prefill")
+    tokens = batch["tokens"]
+    h = _embed_dec(cfg, params, tokens, 0)
+    h, new_blocks = _decode_blocks(cfg, params, h, enc_out, policy, "prefill",
+                                   cache, cache["pos"])
+    h = common.norm_apply(h[:, -1:], params["dec_norm"], cfg.norm)
+    logits = (h @ params["lm_head"]["w"])[:, 0]
+    return logits, {"blocks": new_blocks, "pos": cache["pos"] + tokens.shape[1]}
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, *, policy):
+    pos = cache["pos"]
+    h = _embed_dec(cfg, params, tokens, pos)
+    h, new_blocks = _decode_blocks(cfg, params, h, None, policy, "decode",
+                                   cache, pos)
+    h = common.norm_apply(h, params["dec_norm"], cfg.norm)
+    logits = (h @ params["lm_head"]["w"])[:, 0]
+    return logits, {"blocks": new_blocks, "pos": pos + 1}

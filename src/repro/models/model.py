@@ -1,0 +1,51 @@
+"""Model dispatcher: one uniform API over the whole zoo.
+
+    model = build_model(cfg)
+    params = model.init(rng)
+    logits = model.forward(params, batch, policy=..., phase="train")
+    cache  = model.init_cache(batch_size, max_seq)
+    logits, cache = model.prefill(params, batch, cache, policy=...)
+    logits, cache = model.decode_step(params, tokens, cache, policy=...)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import DENSE, SparsityPolicy
+from repro.models import encdec, transformer
+
+__all__ = ["Model", "build_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    _mod: Any
+
+    def init(self, rng: jax.Array) -> Dict:
+        return self._mod.init_params(self.cfg, rng)
+
+    def forward(self, params, batch, *, policy: SparsityPolicy = DENSE,
+                phase: str = "train"):
+        return self._mod.forward(self.cfg, params, batch, policy=policy,
+                                 phase=phase)
+
+    def init_cache(self, batch_size: int, max_seq: int, dtype=None):
+        return self._mod.init_cache(self.cfg, batch_size, max_seq, dtype)
+
+    def prefill(self, params, batch, cache, *, policy: SparsityPolicy = DENSE):
+        return self._mod.prefill(self.cfg, params, batch, cache, policy=policy)
+
+    def decode_step(self, params, tokens, cache, *,
+                    policy: SparsityPolicy = DENSE):
+        return self._mod.decode_step(self.cfg, params, tokens, cache,
+                                     policy=policy)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    mod = encdec if cfg.is_encdec else transformer
+    return Model(cfg=cfg, _mod=mod)

@@ -1,0 +1,126 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Recurrence (per channel):
+    r_t = σ(x_t W_a),  i_t = σ(x_t W_x)
+    a_t = exp(-c · softplus(Λ) · r_t)                (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+The block wraps the recurrence Griffin-style:
+    y = W_out( RG-LRU(conv4(W_in x)) ⊙ gelu(W_gate x) )
+with a causal width-4 temporal conv.  The linear recurrence is evaluated
+with ``jax.lax.associative_scan`` for prefill (log-depth on TPU) and as a
+single step for decode.
+
+Amber mapping: W_in → 'q_proj' (selective), W_gate → 'gate_proj'
+(selective), W_out → 'o_proj' (skipped); the small recurrence gates
+W_a / W_x and Λ stay dense (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import SparsityPolicy
+from repro.layers.linear import init_linear, sparse_linear
+
+__all__ = ["init_rglru_block", "rglru_block", "init_rglru_state"]
+
+_C = 8.0
+
+
+def init_rglru_block(rng: jax.Array, d: int, rnn_w: int, conv_width: int,
+                     dtype=jnp.float32) -> Dict:
+    r = jax.random.split(rng, 7)
+    return {
+        "q_proj": init_linear(r[0], d, rnn_w, dtype=dtype),      # W_in
+        "gate_proj": init_linear(r[1], d, rnn_w, dtype=dtype),   # W_gate
+        "o_proj": init_linear(r[2], rnn_w, d, dtype=dtype),      # W_out
+        "conv_w": (jax.random.normal(r[3], (conv_width, rnn_w)) *
+                   (conv_width * rnn_w) ** -0.25).astype(dtype),
+        "conv_b": jnp.zeros((rnn_w,), dtype),
+        "gate_a": init_linear(r[4], rnn_w, rnn_w, dtype=dtype),  # W_a (dense)
+        "gate_x": init_linear(r[5], rnn_w, rnn_w, dtype=dtype),  # W_x (dense)
+        "lam": (jax.random.uniform(r[6], (rnn_w,)) * 3 + 2).astype(jnp.float32),
+    }
+
+
+def init_rglru_state(batch: int, rnn_w: int, conv_width: int,
+                     dtype=jnp.float32) -> Dict:
+    return {
+        "h": jnp.zeros((batch, rnn_w), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, rnn_w), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 hist: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv via shifted adds.  x: (B,T,W), hist: (B,cw-1,W)."""
+    cw = w.shape[0]
+    xp = jnp.concatenate([hist, x], axis=1)              # (B, T+cw-1, W)
+    t = x.shape[1]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(cw):
+        y = y + xp[:, i : i + t].astype(jnp.float32) * w[cw - 1 - i].astype(jnp.float32)
+    new_hist = xp[:, -(cw - 1):] if cw > 1 else hist
+    return (y + b.astype(jnp.float32)).astype(x.dtype), new_hist
+
+
+def _rglru_scan(a: jax.Array, bx: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t h_{t-1} + bx_t via associative scan.  a,bx: (B,T,W) f32."""
+    # fold h0 into the first step: bx_0 += a_0 * h0
+    bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return hh
+
+
+def rglru_block(
+    x: jax.Array,                      # (B, T, d)
+    p: Dict,
+    policy: SparsityPolicy,
+    phase: str,
+    state: Optional[Dict] = None,
+    flags: Optional[Dict[str, jax.Array]] = None,
+):
+    """Returns (y, new_state)."""
+    b, t, d = x.shape
+    rnn_w = p["conv_b"].shape[0]
+    cw = p["conv_w"].shape[0]
+    if state is None:
+        state = init_rglru_state(b, rnn_w, cw, x.dtype)
+    fl = flags or {}
+
+    xi = sparse_linear(x, p["q_proj"], "q_proj", policy, phase, None,
+                       fl.get("q_proj"))
+    gate = jax.nn.gelu(
+        sparse_linear(x, p["gate_proj"], "gate_proj", policy, phase, None,
+                      fl.get("gate_proj"))
+    )
+    xc, new_hist = _causal_conv(xi, p["conv_w"], p["conv_b"], state["conv"])
+
+    xf = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["gate_a"]["w"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["gate_x"]["w"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    bx = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+
+    if t == 1:
+        h = a[:, 0] * state["h"] + bx[:, 0]
+        hs = h[:, None]
+        h_last = h
+    else:
+        hs = _rglru_scan(a, bx, state["h"])
+        h_last = hs[:, -1]
+
+    y = (hs.astype(x.dtype) * gate)
+    y = sparse_linear(y, p["o_proj"], "o_proj", policy, phase, None,
+                      fl.get("o_proj"))
+    return y, {"h": h_last, "conv": new_hist}

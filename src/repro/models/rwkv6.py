@@ -1,0 +1,177 @@
+"""RWKV6 "Finch" block — attention-free token mixing with data-dependent decay.
+
+Time-mix (per head h, head size N):
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t
+    y_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+with the decay w_t = exp(-exp(w0 + tanh(x_w A) B)) data-dependent (the
+Finch novelty), and token-shift interpolation feeding every projection.
+
+Channel-mix: k = relu(x_k W_k)²;  y = σ(x_r W_r) ⊙ (k W_v).
+
+Amber mapping (DESIGN.md §5): r/k/v/g projections → 'q_proj' category
+(selective), output projection → 'o_proj' (skipped), channel-mix W_k →
+'gate_proj', W_v → 'down_proj' (always pruned), W_r → 'up_proj' (skipped).
+The tiny decay LoRA stays dense (sensitive).
+
+Prefill/train use a sequential ``lax.scan`` over time (state is O(H·N²) —
+the chunked-parallel TPU kernel is future work, noted in DESIGN.md);
+decode is the single-step recurrence against a carried state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import SparsityPolicy
+from repro.layers.linear import init_linear, sparse_linear
+
+__all__ = ["init_rwkv6_block", "rwkv6_block", "init_rwkv6_state"]
+
+_LORA = 64
+
+
+def init_rwkv6_block(rng: jax.Array, d: int, d_ff: int, n_heads: int,
+                     dtype=jnp.float32) -> Dict:
+    r = jax.random.split(rng, 12)
+    hd = d // n_heads
+    mix = lambda i: (jax.random.uniform(r[i], (d,)) * 0.1 + 0.45).astype(dtype)
+    return {
+        "tm": {
+            "mix_r": mix(0), "mix_k": mix(1), "mix_v": mix(2),
+            "mix_w": mix(3), "mix_g": mix(4),
+            "r_proj": init_linear(r[5], d, d, dtype=dtype),
+            "k_proj_tm": init_linear(r[6], d, d, dtype=dtype),
+            "v_proj_tm": init_linear(r[7], d, d, dtype=dtype),
+            "g_proj": init_linear(r[8], d, d, dtype=dtype),
+            "o_proj": init_linear(r[9], d, d, dtype=dtype),
+            "w0": (jnp.zeros((d,)) - 4.0).astype(jnp.float32),
+            "w_A": (jax.random.normal(r[10], (d, _LORA)) * 0.01).astype(dtype),
+            "w_B": (jax.random.normal(r[11], (_LORA, d)) * 0.01).astype(dtype),
+            "u": jnp.zeros((n_heads, hd), jnp.float32),
+            "ln_x": {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)},
+        },
+        "cm": {
+            "mix_k": mix(0), "mix_r": mix(1),
+            "gate_proj": init_linear(r[6], d, d_ff, dtype=dtype),   # W_k
+            "down_proj": init_linear(r[7], d_ff, d, dtype=dtype),   # W_v
+            "up_proj": init_linear(r[8], d, d, dtype=dtype),        # W_r
+        },
+    }
+
+
+def init_rwkv6_state(batch: int, d: int, n_heads: int, dtype=jnp.float32) -> Dict:
+    hd = d // n_heads
+    return {
+        "tm_shift": jnp.zeros((batch, d), dtype),
+        "cm_shift": jnp.zeros((batch, d), dtype),
+        "S": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+    }
+
+
+def _group_norm(x: jax.Array, p: Dict, n_heads: int, eps=1e-5) -> jax.Array:
+    b, t, d = x.shape
+    xh = x.reshape(b, t, n_heads, d // n_heads).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(b, t, d) * p["w"] + p["b"]).astype(x.dtype)
+
+
+def _time_mix_step(
+    carry: Tuple[jax.Array, jax.Array],
+    rkvwg: Tuple[jax.Array, ...],
+    u: jax.Array,
+    n_heads: int,
+):
+    """One recurrence step.  carry = S (B,H,N,N); inputs are (B,d)."""
+    S = carry
+    r, k, v, w = rkvwg
+    b, d = r.shape
+    hd = d // n_heads
+    rh = r.reshape(b, n_heads, hd).astype(jnp.float32)
+    kh = k.reshape(b, n_heads, hd).astype(jnp.float32)
+    vh = v.reshape(b, n_heads, hd).astype(jnp.float32)
+    wh = w.reshape(b, n_heads, hd)
+    kv = kh[..., :, None] * vh[..., None, :]                 # (B,H,N,N)
+    y = jnp.einsum("bhk,bhkn->bhn", rh, S + u[None, :, :, None] * kv)
+    S_new = wh[..., :, None] * S + kv
+    return S_new, y.reshape(b, d)
+
+
+def rwkv6_block(
+    x: jax.Array,                       # (B, T, d)
+    p: Dict,
+    policy: SparsityPolicy,
+    phase: str,
+    n_heads: int,
+    state: Optional[Dict] = None,
+    flags: Optional[Dict[str, jax.Array]] = None,
+):
+    """Returns (y, new_state).  state=None → fresh zeros (prefill/train)."""
+    b, t, d = x.shape
+    if state is None:
+        state = init_rwkv6_state(b, d, n_heads, x.dtype)
+    fl = flags or {}
+    tm, cm = p["tm"], p["cm"]
+
+    # ---- time mix ----
+    prev = jnp.concatenate([state["tm_shift"][:, None], x[:, :-1]], axis=1)
+    dx = prev - x
+    xr = x + dx * tm["mix_r"]
+    xk = x + dx * tm["mix_k"]
+    xv = x + dx * tm["mix_v"]
+    xw = x + dx * tm["mix_w"]
+    xg = x + dx * tm["mix_g"]
+
+    qflag = fl.get("q_proj")
+    r = sparse_linear(xr, tm["r_proj"], "q_proj", policy, phase, None, qflag)
+    k = sparse_linear(xk, tm["k_proj_tm"], "q_proj", policy, phase, None, qflag)
+    v = sparse_linear(xv, tm["v_proj_tm"], "q_proj", policy, phase, None, qflag)
+    g = jax.nn.silu(
+        sparse_linear(xg, tm["g_proj"], "q_proj", policy, phase, None, qflag)
+    )
+    w = jnp.exp(-jnp.exp(
+        tm["w0"]
+        + jnp.tanh(xw.astype(jnp.float32) @ tm["w_A"].astype(jnp.float32))
+        @ tm["w_B"].astype(jnp.float32)
+    ))                                                        # (B,T,d) f32
+
+    u = tm["u"]
+    if t == 1:
+        S_new, y = _time_mix_step(
+            state["S"], (r[:, 0], k[:, 0], v[:, 0], w[:, 0]), u, n_heads
+        )
+        y = y[:, None]
+    else:
+        def body(S, xs):
+            return _time_mix_step(S, xs, u, n_heads)
+        xs = (r.transpose(1, 0, 2), k.transpose(1, 0, 2),
+              v.transpose(1, 0, 2), w.transpose(1, 0, 2))
+        S_new, ys = jax.lax.scan(body, state["S"], xs)
+        y = ys.transpose(1, 0, 2)
+
+    y = _group_norm(y.astype(x.dtype), tm["ln_x"], n_heads) * g
+    y = sparse_linear(y, tm["o_proj"], "o_proj", policy, phase, None,
+                      fl.get("o_proj"))
+    h = x + y
+
+    # ---- channel mix ----
+    prev_c = jnp.concatenate([state["cm_shift"][:, None], h[:, :-1]], axis=1)
+    dxc = prev_c - h
+    xkc = h + dxc * cm["mix_k"]
+    xrc = h + dxc * cm["mix_r"]
+    kk = sparse_linear(xkc, cm["gate_proj"], "gate_proj", policy, phase, None,
+                       fl.get("gate_proj"))
+    kk = jnp.square(jax.nn.relu(kk))
+    kv = sparse_linear(kk, cm["down_proj"], "down_proj", policy, phase, None,
+                       fl.get("down_proj"))
+    rr = jax.nn.sigmoid(
+        sparse_linear(xrc, cm["up_proj"], "up_proj", policy, phase, None,
+                      fl.get("up_proj"))
+    )
+    out = h + rr * kv
+
+    new_state = {"tm_shift": x[:, -1], "cm_shift": h[:, -1], "S": S_new}
+    return out, new_state

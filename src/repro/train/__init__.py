@@ -1,0 +1,11 @@
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update, cosine_lr
+from repro.train.train_step import loss_fn, make_train_step
+
+__all__ = [
+    "OptConfig",
+    "adamw_init",
+    "adamw_update",
+    "cosine_lr",
+    "loss_fn",
+    "make_train_step",
+]

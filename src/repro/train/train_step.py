@@ -1,0 +1,108 @@
+"""Training step: loss, grads, microbatch accumulation, compression hook.
+
+``make_train_step`` builds the jit-able function lowered by the dry-run:
+
+    step_fn(params, opt_state, batch) -> (params, opt_state, metrics)
+
+Distributed behaviour comes from pjit shardings on the arguments; the step
+body itself is mesh-agnostic.  Gradient accumulation runs as a
+``lax.scan`` over microbatches — with ``grad_accum > 1`` XLA's
+latency-hiding scheduler overlaps the DP gradient reduce of microbatch i
+with the compute of microbatch i+1 (the compute/comm overlap lever
+recorded in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import DENSE, SparsityPolicy
+from repro.train.optimizer import OptConfig, adamw_update, global_norm
+
+__all__ = ["loss_fn", "make_train_step"]
+
+
+def loss_fn(
+    model,
+    params: Any,
+    batch: Dict[str, jax.Array],
+    policy: SparsityPolicy = DENSE,
+) -> jax.Array:
+    """Next-token cross-entropy in f32 (tokens (B, S+1) → inputs/labels)."""
+    tokens = batch["tokens"]
+    inp = {**batch, "tokens": tokens[:, :-1]}
+    labels = tokens[:, 1:]
+    logits = model.forward(params, inp, policy=policy, phase="train")
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def make_train_step(
+    model,
+    opt_cfg: OptConfig,
+    policy: SparsityPolicy = DENSE,
+    grad_accum: int = 1,
+    compressor: Optional[Callable[[Any], Any]] = None,
+) -> Callable:
+    """Returns step_fn(params, opt_state, batch) → (params, opt, metrics).
+
+    Args:
+      grad_accum:  microbatches per step (global batch split on the leading
+                   axis; must divide the per-step batch).
+      compressor:  optional gradient transform applied before the optimizer
+                   (e.g. distributed.compression.ErrorFeedbackInt8).
+    """
+
+    def compute_grads(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch, policy)
+        )(params)
+
+    def step_fn(params, opt_state, batch):
+        if grad_accum == 1:
+            loss, grads = compute_grads(params, batch)
+        else:
+            tokens = batch["tokens"]
+            b = tokens.shape[0]
+            assert b % grad_accum == 0, (b, grad_accum)
+            mb = b // grad_accum
+            micro = {
+                k: v.reshape(grad_accum, mb, *v.shape[1:])
+                for k, v in batch.items()
+            }
+
+            def accum(carry, mbatch):
+                from repro.distributed.sharding import shard_zero1
+
+                loss_acc, g_acc = carry
+                loss_i, g_i = compute_grads(params, mbatch)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32) / grad_accum,
+                    g_acc, g_i)
+                # ZeRO-2: keep the f32 accumulator DP-sharded — XLA emits a
+                # reduce-scatter per microbatch instead of a replicated
+                # all-reduce at the end
+                g_acc = shard_zero1(g_acc)
+                return (loss_acc + loss_i / grad_accum, g_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(accum, (jnp.float32(0), g0), micro)
+
+        if compressor is not None:
+            grads = compressor(grads)
+
+        new_params, new_opt = adamw_update(opt_cfg, grads, opt_state, params)
+        metrics = {
+            "loss": loss,
+            "grad_norm": global_norm(grads),
+            "step": new_opt["step"],
+        }
+        return new_params, new_opt, metrics
+
+    return step_fn

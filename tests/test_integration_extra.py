@@ -1,0 +1,84 @@
+"""Integration extras: flash-attention model path, MoE capacity semantics,
+straggler hook."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.core.policy import DENSE
+from repro.models import build_model
+
+
+def test_flash_attn_impl_matches_chunked(rng):
+    """Model forward with the Pallas flash kernel == chunked-jnp path."""
+    base = dataclasses.replace(get_smoke_config("stablelm_3b"),
+                               dtype="float32", attn_chunk=16)
+    cfg_flash = dataclasses.replace(base, attn_impl="flash")
+    m1, m2 = build_model(base), build_model(cfg_flash)
+    params = m1.init(rng)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                          base.vocab_size)}
+    y1 = m1.forward(params, batch, policy=DENSE, phase="prefill")
+    y2 = m2.forward(params, batch, policy=DENSE, phase="prefill")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_matches_ragged_when_ample(rng):
+    """The fixed-capacity shard_map dispatch must agree with the local
+    ragged_dot path when no tokens are dropped (ample capacity)."""
+    from repro.models import moe as moe_mod
+
+    cfg = dataclasses.replace(get_smoke_config("mixtral_8x7b"),
+                              dtype="float32")
+    model = build_model(cfg)
+    params = model.init(rng)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                          cfg.vocab_size)}
+    y_local = model.forward(params, batch, policy=DENSE, phase="prefill")
+
+    # route through the shard_map body on a 1×1 mesh (capacity path)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with mesh:
+        y_sm = model.forward(params, batch, policy=DENSE, phase="prefill")
+    # capacity = 1.25× mean load; random routing at B*T=32 tokens over 4
+    # experts can exceed it → allow small deviation on dropped tokens
+    rel = float(jnp.linalg.norm(y_sm - y_local) /
+                (jnp.linalg.norm(y_local) + 1e-9))
+    assert rel < 0.15, rel
+
+
+def test_moe_capacity_drops_are_bounded(rng):
+    """With adversarially-imbalanced routing, drops must only ever REMOVE
+    expert contributions (never corrupt them)."""
+    from repro.core.policy import DENSE
+    from repro.models.moe import _moe_local
+
+    d, f, e, t = 16, 32, 4, 64
+    k1, k2 = jax.random.split(rng)
+    p = {
+        "router": {"w": jnp.zeros((d, e)).at[:, 0].set(10.0)},  # all → e0
+        "experts": {
+            "gate_proj": {"w": jax.random.normal(k1, (e, d, f)) * 0.1},
+            "up_proj": {"w": jax.random.normal(k2, (e, d, f)) * 0.1},
+            "down_proj": {"w": jax.random.normal(k1, (e, f, d)) * 0.1},
+        },
+    }
+    x = jax.random.normal(k2, (t, d))
+    y = _moe_local(x, p, DENSE, "prefill", top_k=1)
+    assert jnp.all(jnp.isfinite(y))
+
+
+def test_straggler_watermark():
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    t = Trainer.__new__(Trainer)
+    t.cfg = TrainerConfig(straggler_factor=2.0)
+    t._times = []
+    flags = [t._straggler(dt) for dt in [1.0] * 10 + [5.0]]
+    assert not any(flags[:10])
+    assert flags[10]  # 5× median flagged

@@ -1,0 +1,137 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(32, 64, 64), (64, 128, 96), (128, 256, 128), (256, 512, 256)]
+PATTERNS = [(2, 4), (4, 8), (8, 16)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("t,d,no", SHAPES)
+@pytest.mark.parametrize("n,m", PATTERNS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_nm_prune_kernel(t, d, no, n, m, dtype, rng):
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, (t, d), dtype=dtype)
+    scale = jax.random.uniform(k2, (d,)) + 0.5
+    got = ops.nm_prune(x, scale, n, m)
+    want = ref.nm_prune_ref(x, scale, n, m)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+    # structural check: valid N:M sparsity
+    groups = np.asarray(got != 0, np.int32).reshape(t, d // m, m).sum(-1)
+    assert (groups <= n).all()
+
+
+@pytest.mark.parametrize("t,d,no", SHAPES)
+@pytest.mark.parametrize("n,m", PATTERNS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_nm_spmm_kernel(t, d, no, n, m, dtype, rng):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    x = jax.random.normal(k1, (t, d), dtype=dtype)
+    w = jax.random.normal(k2, (d, no), dtype=dtype)
+    scale = jax.random.uniform(k3, (d,)) + 0.5
+    tile = min(32, t)
+    got = ops.nm_spmm(x, w, scale, n, m, tile=tile)
+    want = ref.nm_spmm_ref(x, w, scale, n, m, tile=tile)
+    tol = dict(rtol=5e-2, atol=5e-1) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+@pytest.mark.parametrize("t,d,no", SHAPES)
+def test_w8a8_kernel(t, d, no, rng):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    xq = jax.random.randint(k1, (t, d), -127, 128).astype(jnp.int8)
+    wq = jax.random.randint(k2, (d, no), -127, 128).astype(jnp.int8)
+    xs = jnp.float32(0.013)
+    ws = jax.random.uniform(k3, (no,)) * 0.02
+    got = ops.w8a8_matmul(xq, wq, xs, ws)
+    want = ref.w8a8_matmul_ref(xq, wq, xs, ws)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_nm_prune_no_scale_matches_naive(rng):
+    x = jax.random.normal(rng, (64, 128))
+    got = ops.nm_prune(x, None, 2, 4)
+    want = ref.nm_prune_ref(x, None, 2, 4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-7)
+
+
+def test_kernel_batched_inputs(rng):
+    x = jax.random.normal(rng, (2, 16, 128))
+    got = ops.nm_prune(x, None, 4, 8)
+    want = ref.nm_prune_ref(x.reshape(32, 128), None, 4, 8).reshape(2, 16, 128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-7)
+
+
+@pytest.mark.parametrize("b,h,t,s,d,causal", [
+    (2, 4, 64, 64, 32, True),
+    (1, 2, 128, 128, 64, True),
+    (2, 2, 64, 128, 32, False),
+    (1, 8, 256, 256, 128, True),
+])
+def test_flash_attention_kernel(b, h, t, s, d, causal, rng):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.kernels.ref import flash_attention_ref
+    k1, k2, k3 = jax.random.split(rng, 3)
+    q = jax.random.normal(k1, (b, h, t, d))
+    k = jax.random.normal(k2, (b, h, s, d))
+    v = jax.random.normal(k3, (b, h, s, d))
+    got = flash_attention_pallas(q, k, v, causal=causal, block_q=32,
+                                 block_k=32)
+    want = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("t,d,w", [(128, 32, 32), (256, 64, 64),
+                                   (128, 32, 96)])
+def test_flash_attention_sliding_window(t, d, w, rng):
+    """SWA band variant (mixtral/recurrentgemma prefill) vs oracle —
+    off-band KV blocks are skipped at block granularity (O(T·window))."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.kernels.ref import flash_attention_ref
+    k1, k2, k3 = jax.random.split(rng, 3)
+    q = jax.random.normal(k1, (1, 2, t, d))
+    k = jax.random.normal(k2, (1, 2, t, d))
+    v = jax.random.normal(k3, (1, 2, t, d))
+    got = flash_attention_pallas(q, k, v, causal=True, window=w,
+                                 block_q=32, block_k=32)
+    want = flash_attention_ref(q, k, v, causal=True, window=w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_flash_attention_dtypes(dtype, rng):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.kernels.ref import flash_attention_ref
+    q = jax.random.normal(rng, (1, 2, 64, 32), dtype=dtype)
+    got = flash_attention_pallas(q, q, q, block_q=32, block_k=32)
+    want = flash_attention_ref(q, q, q)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+def test_nm_spmm_flop_advantage_structure(rng):
+    """The compacted contraction must touch exactly D·n/m weight rows/tile."""
+    from repro.core import nm as nmod
+    from repro.core import scoring
+    x = jax.random.normal(rng, (32, 64))
+    s = scoring.score_activations(x, None)
+    chans = nmod.tile_consensus_channels(s, 2, 4)
+    assert chans.shape == (16, 2)        # D/m groups × n survivors
+    xc = nmod.compact_columns(x, chans)
+    assert xc.shape == (32, 32)          # D·n/m = 64·2/4

@@ -1,0 +1,98 @@
+"""N:M primitive unit + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import nm
+
+PATTERNS = [(1, 4), (2, 4), (4, 8), (8, 16), (3, 8)]
+
+
+@pytest.mark.parametrize("n,m", PATTERNS)
+def test_mask_popcount_exact(n, m, rng):
+    scores = jnp.abs(jax.random.normal(rng, (16, 8 * m)))
+    mask = nm.nm_topk_mask(scores, n, m)
+    groups = np.asarray(mask).reshape(16, 8, m).sum(-1)
+    assert (groups == n).all()
+
+
+def test_dense_pattern_is_identity(rng):
+    s = jnp.abs(jax.random.normal(rng, (4, 16)))
+    assert bool(nm.nm_topk_mask(s, 4, 4).all())
+
+
+@pytest.mark.parametrize("n,m", PATTERNS)
+def test_mask_keeps_top_scores(n, m, rng):
+    scores = jnp.abs(jax.random.normal(rng, (8, 4 * m)))
+    mask = np.asarray(nm.nm_topk_mask(scores, n, m))
+    s = np.asarray(scores).reshape(8, 4, m)
+    mk = mask.reshape(8, 4, m)
+    kept_min = np.where(mk, s, np.inf).min(-1)
+    dropped_max = np.where(~mk, s, -np.inf).max(-1)
+    assert (kept_min >= dropped_max - 1e-6).all()
+
+
+def test_apply_nm_zeroes_complement(rng):
+    x = jax.random.normal(rng, (8, 32))
+    y = nm.apply_nm(x, jnp.abs(x), 2, 4)
+    assert float(nm.sparsity_fraction(y)) >= 0.5 - 1e-6
+    # surviving entries are unchanged
+    keep = np.asarray(y) != 0
+    np.testing.assert_array_equal(np.asarray(y)[keep], np.asarray(x)[keep])
+
+
+def test_validate_nm(rng):
+    s = jnp.abs(jax.random.normal(rng, (4, 32)))
+    mask = nm.nm_topk_mask(s, 2, 4)
+    assert bool(nm.validate_nm(mask, 2, 4))
+    assert not bool(nm.validate_nm(jnp.ones((4, 32), bool), 2, 4))
+
+
+def test_bad_pattern_raises():
+    with pytest.raises(ValueError):
+        nm.nm_topk_mask(jnp.ones((4, 16)), 5, 4)
+    with pytest.raises(ValueError):
+        nm.nm_group_view(jnp.ones((4, 15)), 4)
+
+
+# ---------------------------------------------------------- property tests
+
+@settings(max_examples=40, deadline=None)
+@given(
+    t=st.integers(1, 8),
+    g=st.integers(1, 8),
+    nm_pair=st.sampled_from(PATTERNS),
+    seed=st.integers(0, 2**30),
+)
+def test_property_mask_invariants(t, g, nm_pair, seed):
+    n, m = nm_pair
+    scores = jnp.abs(jax.random.normal(jax.random.PRNGKey(seed), (t, g * m)))
+    mask = nm.nm_topk_mask(scores, n, m)
+    # exactly n per group, always
+    assert bool(nm.validate_nm(mask, n, m))
+    counts = np.asarray(mask).reshape(t, g, m).sum(-1)
+    assert (counts == n).all()
+    # idempotence: pruning twice == pruning once
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (t, g * m))
+    once = nm.apply_nm(x, scores, n, m)
+    twice = nm.apply_nm(once, scores, n, m)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    g=st.integers(1, 6),
+    nm_pair=st.sampled_from([(2, 4), (4, 8), (8, 16)]),
+    seed=st.integers(0, 2**30),
+)
+def test_property_tile_consensus_channels(g, nm_pair, seed):
+    n, m = nm_pair
+    scores = jnp.abs(jax.random.normal(jax.random.PRNGKey(seed), (7, g * m)))
+    chans = np.asarray(nm.tile_consensus_channels(scores, n, m))
+    assert chans.shape == (g, n)
+    # channels stay inside their group and are unique
+    for gi in range(g):
+        assert (chans[gi] >= gi * m).all() and (chans[gi] < (gi + 1) * m).all()
+        assert len(set(chans[gi].tolist())) == n

@@ -1,0 +1,79 @@
+"""SmoothQuant / Outstanding-sparse quantization tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+def _calib(rng, t, d, outliers=4):
+    x = jax.random.normal(rng, (t, d))
+    # outlier channels (the SmoothQuant motivation)
+    x = x.at[:, :outliers].multiply(30.0)
+    return x
+
+
+def test_weight_quant_roundtrip(rng):
+    w = jax.random.normal(rng, (32, 16))
+    q, s = quant.quantize_weight_per_channel(w)
+    assert q.dtype == jnp.int8
+    rel = float(jnp.max(jnp.abs(q * s - w)) / jnp.max(jnp.abs(w)))
+    assert rel < 0.01
+
+
+def test_smooth_factors_direction(rng):
+    x = _calib(rng, 64, 32)
+    w = jax.random.normal(rng, (32, 16))
+    am = jnp.max(jnp.abs(x), axis=0)
+    s_plain = quant.smooth_factors(am, w, alpha=0.5, outstanding=False)
+    s_out = quant.smooth_factors(am, w, alpha=0.1, outstanding=True)
+    # vanilla: outlier channels get larger s (shrinks activations)
+    assert float(s_plain[0]) > float(jnp.median(s_plain[4:]))
+    # Outstanding-sparse inverts: outlier channels get SMALLER ŝ (expands)
+    assert float(s_out[0]) < float(jnp.median(s_out[4:]))
+
+
+def test_quantized_linear_accuracy(rng):
+    k1, k2 = jax.random.split(rng)
+    x = _calib(k1, 64, 32)
+    w = jax.random.normal(k2, (32, 16))
+    am = jnp.max(jnp.abs(x), axis=0)
+    dense = x @ w
+    for outstanding, alpha in [(False, 0.5), (True, 0.1)]:
+        ql = quant.make_quantized_linear(
+            w, am, quant.QuantConfig(alpha=alpha, outstanding=outstanding))
+        y = ql(x)
+        rel = float(jnp.linalg.norm(y - dense) / jnp.linalg.norm(dense))
+        assert rel < 0.05, (outstanding, rel)
+
+
+def test_per_token_dynamic_quant(rng):
+    x = _calib(rng, 32, 16)
+    q, s = quant.quantize_act_per_token(x)
+    assert q.dtype == jnp.int8 and s.shape == (32, 1)
+    rel = float(jnp.max(jnp.abs(q * s - x)) / jnp.max(jnp.abs(x)))
+    assert rel < 0.01
+
+
+def test_quant_config_skips():
+    cfg = quant.QuantConfig(skip_modules=("down_proj",), skip_layers=(0, 1))
+    assert not cfg.should_quantize("down_proj", 5)
+    assert not cfg.should_quantize("q_proj", 0)
+    assert cfg.should_quantize("q_proj", 2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**30), alpha=st.floats(0.05, 0.95))
+def test_property_smooth_rewrite_exact(seed, alpha):
+    """Y = (X/s)(s⊙W) must equal XW exactly in f32 (pre-quantization)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (8, 16))
+    w = jax.random.normal(k2, (16, 4))
+    am = jnp.max(jnp.abs(x), axis=0)
+    for outstanding in (False, True):
+        s = quant.smooth_factors(am, w, alpha, outstanding)
+        y = (x / s) @ (w * s[:, None])
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                                   rtol=1e-4, atol=1e-4)

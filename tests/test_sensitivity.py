@@ -1,0 +1,71 @@
+"""Sensitivity scan + layer-skip selection (the paper's heuristic)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.core import sensitivity
+from repro.core.policy import DENSE, paper_policy
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = dataclasses.replace(get_smoke_config("llama31_8b"),
+                              dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                                          cfg.vocab_size)}
+    return cfg, model, params, batch
+
+
+def test_relative_perturbation_basics(rng):
+    y = jax.random.normal(rng, (4, 8))
+    assert float(sensitivity.relative_perturbation(y, y)) == 0.0
+    assert float(sensitivity.relative_perturbation(y, -y)) == pytest.approx(
+        2.0, rel=1e-3)
+
+
+def test_targeted_policy_prunes_only_target():
+    base = paper_policy(2, 4)
+    pol = sensitivity.targeted_policy("q_proj", 2, n_layers=4, base=base)
+    assert pol.should_prune("q_proj", 2)
+    for layer in (0, 1, 3):
+        assert not pol.should_prune("q_proj", layer)
+    for mod in ("k_proj", "down_proj", "gate_proj", "o_proj"):
+        for layer in range(4):
+            assert not pol.should_prune(mod, layer)
+
+
+def test_sensitivity_scan_and_selection(small_model):
+    cfg, model, params, batch = small_model
+
+    def forward(params, batch, policy, phase):
+        return model.forward(params, batch, policy=policy, phase=phase)
+
+    base = paper_policy(2, 4)
+    sens = sensitivity.sensitivity_scan(
+        forward, params, batch, ["q_proj", "gate_proj", "down_proj"],
+        cfg.n_layers, base)
+    assert len(sens) == 3 * cfg.n_layers
+    assert all(v >= 0 for v in sens.values())
+    assert any(v > 0 for v in sens.values())
+
+    dims = {
+        "q_proj": (cfg.d_model, cfg.q_dim),
+        "k_proj": (cfg.d_model, cfg.kv_dim),
+        "v_proj": (cfg.d_model, cfg.kv_dim),
+        "o_proj": (cfg.q_dim, cfg.d_model),
+        "gate_proj": (cfg.d_model, cfg.d_ff),
+        "up_proj": (cfg.d_model, cfg.d_ff),
+        "down_proj": (cfg.d_ff, cfg.d_model),
+    }
+    flops = sensitivity.linear_flops(dims)
+    skips = sensitivity.select_qgate_skips(sens, flops, cfg.n_layers, base,
+                                           coverage_target=0.55)
+    pol = base.with_(skip_layers={"q_proj": frozenset(skips),
+                                  "gate_proj": frozenset(skips)})
+    assert sensitivity.coverage(flops, pol, cfg.n_layers) >= 0.55
