@@ -2,9 +2,16 @@
 
 Wall-times here are CPU interpret-mode (NOT TPU-representative); the
 derived column carries the analytic TPU roofline estimate per call:
-  nm_prune    — bandwidth-bound: 2·T·D·dtype_bytes / 819 GB/s
-  nm_spmm     — compute-bound:   2·T·(D·n/m)·N_out / 197 TFLOP/s
-  w8a8_matmul — compute-bound:   2·T·D·N_out / (2×197) TFLOP/s (int8 2×)
+  nm_prune         — bandwidth-bound: 2·T·D·dtype_bytes / 819 GB/s
+  nm_prune_matmul  — fused per-token projection: the GEMM's block
+                     streaming is the same as dense; the fusion removes
+                     the prune stage's masked-copy write + re-read
+                     (2 full X passes) that the jnp chain pays on top
+  nm_spmm          — compute-bound:   2·T·(D·n/m)·N_out / 197 TFLOP/s
+  osparse_matmul   — int8 GEMM at 2× PEAK; fusion removes the jnp
+                     chain's smoothed/masked/quantized copies
+                     (~3 writes + 3 extra reads of X)
+  w8a8_matmul      — compute-bound:   2·T·D·N_out / (2×197) TFLOP/s
 vs the dense bf16 GEMM baseline 2·T·D·N_out / 197 TFLOP/s.
 """
 from __future__ import annotations
@@ -39,6 +46,20 @@ def run() -> list[str]:
                             f"tpu_est_s={est:.3e};dense_gemm_s={dense_s:.3e};"
                             f"overhead_frac={est/dense_s:.3f}"))
 
+        # fused per-token prune+GEMM: GEMM streaming is identical to the
+        # dense tiled matmul; fusion saves the masked-copy write + re-read
+        us = timeit_us(lambda: ops.nm_prune_matmul(x, w, scale, 8, 16),
+                       iters=3)
+        bytes_gemm = (t * d + d * no + t * no) * 2
+        bytes_prune_pass = 2 * t * d * 2           # write Xp, re-read Xp
+        est = max(dense_s, bytes_gemm / HBM)
+        est_unfused = est + bytes_prune_pass / HBM
+        saved = bytes_prune_pass / (bytes_gemm + bytes_prune_pass)
+        rows.append(csv_row(
+            f"kernel/nm_prune_matmul/{t}x{d}x{no}", us,
+            f"tpu_est_s={est:.3e};unfused_est_s={est_unfused:.3e};"
+            f"hbm_saved_frac={saved:.3f}"))
+
         us = timeit_us(lambda: ops.nm_spmm(x, w, scale, 8, 16), iters=3)
         est = 2 * t * (d // 2) * no / PEAK
         rows.append(csv_row(f"kernel/nm_spmm/{t}x{d}x{no}", us,
@@ -54,6 +75,26 @@ def run() -> list[str]:
         rows.append(csv_row(f"kernel/w8a8/{t}x{d}x{no}", us,
                             f"tpu_est_s={est:.3e};speedup_vs_bf16="
                             f"{dense_s/est:.2f}x"))
+
+        # fused Outstanding-sparse chain: smooth→prune→int8→GEMM→dequant
+        smooth = jax.random.uniform(k3, (d,)) + 0.5
+        us = timeit_us(
+            lambda: ops.osparse_matmul(x.astype(jnp.float32), wq, smooth,
+                                       scale, ws, 8, 16,
+                                       act_scale=jnp.float32(0.01)),
+            iters=3)
+        bytes_fused = t * d * 2 + d * no + t * no * 4   # bf16 X, int8 W
+        # jnp chain adds the smoothed (f32 write+read), masked (f32
+        # write+read) and quantized (int8 write+read) copies of X
+        bytes_chain = (t * d * (2 + 4 + 4 + 4 + 4 + 1 + 1)
+                       + d * no + t * no * 4)
+        est = max(2 * t * d * no / (2 * PEAK),      # int8 MXU at 2× PEAK
+                  bytes_fused / HBM)
+        est_chain = 2 * t * d * no / (2 * PEAK) + bytes_chain / HBM
+        rows.append(csv_row(
+            f"kernel/osparse_matmul/{t}x{d}x{no}", us,
+            f"tpu_est_s={est:.3e};unfused_est_s={est_chain:.3e};"
+            f"speedup_vs_bf16={dense_s/est:.2f}x"))
     return rows
 
 

@@ -48,6 +48,16 @@ class SparsityPolicy:
                      not stable); fall back to |X| there when True.
       tile_consensus: TPU-native mode — one shared N:M pattern per token
                      tile (see DESIGN.md §2); tile size in tokens.
+      use_pallas_kernels: route prunable projections through the fused
+                     Pallas kernels (``repro.kernels.ops``): per-token mode
+                     lowers to one ``nm_prune_matmul`` call, tile-consensus
+                     to the k-blocked ``nm_spmm``, and the Outstanding-
+                     sparse W8A8 chain to ``osparse_matmul``.  The pure-jnp
+                     path stays the bit-exact oracle/fallback and is always
+                     used for scan-stacked ``layer_flag`` models (which
+                     need the mask-select form, not a fused GEMM).  The
+                     ``REPRO_PALLAS_INTERPRET`` env switch controls whether
+                     the kernels run interpreted (CPU) or compiled (TPU).
     """
 
     enabled: bool = True
@@ -62,6 +72,7 @@ class SparsityPolicy:
     moe_plain_score: bool = True
     tile_consensus: bool = False
     tile_size: int = 256
+    use_pallas_kernels: bool = False
 
     def __post_init__(self):
         if self.m % max(self.n, 1) != 0 and self.n != self.m:
@@ -112,6 +123,7 @@ def paper_policy(
     qgate_skip_layers: Tuple[int, ...] = (),
     score_mode: str = "robust",
     tile_consensus: bool = False,
+    use_pallas_kernels: bool = False,
 ) -> SparsityPolicy:
     """The paper's deployment: Amber-P with layer skipping.
 
@@ -128,6 +140,7 @@ def paper_policy(
             "gate_proj": frozenset(qgate_skip_layers),
         },
         tile_consensus=tile_consensus,
+        use_pallas_kernels=use_pallas_kernels,
     )
 
 

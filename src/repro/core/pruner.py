@@ -64,7 +64,20 @@ def sparse_matmul(
     dense matmul at (n/m) of the FLOPs.  Token axes are flattened, tiled by
     ``policy.tile_size`` (padded if needed), and each tile contracts only its
     surviving channels against the gathered weight rows.
+
+    ``policy.use_pallas_kernels`` reroutes both modes onto the fused Pallas
+    kernels (one ``pallas_call``, X streamed through VMEM once — no masked
+    copy materialized in HBM); the jnp code below stays the bit-exact
+    oracle and the fallback for callers that need the mask itself.
     """
+    if policy.use_pallas_kernels:
+        from repro.kernels import ops
+
+        if policy.tile_consensus:
+            return ops.nm_spmm(x, w, scale, policy.n, policy.m,
+                               tile=policy.tile_size)
+        return ops.nm_prune_matmul(x, w, scale, policy.n, policy.m)
+
     if not policy.tile_consensus:
         xp = prune_input(x, scale, policy)
         return xp @ w

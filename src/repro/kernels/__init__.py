@@ -1,16 +1,62 @@
 """Pallas TPU kernels for the Amber Pruner hot paths.
 
-  nm_prune         — fused scoring + per-token N:M top-k + mask (1 HBM pass)
-  nm_spmm          — tile-consensus compacted matmul (the TPU-native SpMM)
-  w8a8_matmul      — int8×int8→int32 GEMM with SmoothQuant dequant
+Kernel family (each is ONE ``pallas_call`` — every intermediate lives in
+VMEM/registers, never HBM):
+
+  nm_prune         — fused scoring + per-token N:M top-k + mask
+  nm_prune_matmul  — fused prune + GEMM (the per-token projection itself)
+  nm_spmm          — tile-consensus compacted matmul (TPU-native SpMM),
+                     k-blocked over D with an f32 accumulator scratch
+  osparse_matmul   — Outstanding-sparse chain: smooth-divide → prune →
+                     int8 quantize (static or per-token) → int8 GEMM →
+                     dequant
+  w8a8_matmul      — plain int8×int8→int32 GEMM with SmoothQuant dequant
   flash_attention  — causal online-softmax attention, VMEM score tiles
-                     (kills the O(T·S) HBM score traffic that dominates the
-                     32k-prefill memory roofline term)
+
+Dispatch order for model projections (``layers.linear.sparse_linear``):
+
+  1. ``SparsityPolicy.use_pallas_kernels`` — the policy flag routes each
+     prunable linear onto the fused kernel for its mode (per-token →
+     ``nm_prune_matmul``; tile-consensus → ``nm_spmm``; Outstanding-sparse
+     W8A8 → ``osparse_matmul``).  Scan-stacked ``layer_flag`` models always
+     fall back to the jnp mask-select form.
+  2. ``REPRO_PALLAS_INTERPRET`` env switch — ``1`` (default, CPU container)
+     runs the kernels through the Pallas interpreter; ``0`` compiles the
+     same BlockSpecs to Mosaic on a real TPU.
+  3. The pure-jnp implementations in ``repro.core`` remain the bit-exact
+     oracles (``kernels.ref`` wraps them per kernel for the test sweeps).
+
+One-pass HBM cost model (per projection call, activation bytes B = T·D·s;
+"pass" = one full traversal of X *beyond* the tiled GEMM's own block
+streaming, which is identical for the fused and unfused forms):
+
+  nm_prune_matmul   0 extra passes — the mask lives in registers; the jnp
+                    chain spends 2 (write the masked copy, re-read it).
+  osparse_matmul    static scale: 0 extra passes; per-token scale: 1 (the
+                    absmax sweep, run once per token block) — and ZERO
+                    intermediate writes either way, vs the jnp chain's ~4
+                    reads + 3 writes (smoothed, masked, quantized copies).
+  nm_spmm           0 extra passes at (n/m) of the dense MXU FLOPs; VMEM
+                    residency is per k-block (bt·bk + bk·bo), so reduction
+                    depth D is unbounded (16k+ tiles fine).
 
 ``ops``  — jit'd wrappers (batched, padded, interpret-mode switch)
 ``ref``  — pure-jnp oracles used by the allclose test sweeps
 """
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.ops import nm_prune, nm_spmm, w8a8_matmul
+from repro.kernels.ops import (
+    nm_prune,
+    nm_prune_matmul,
+    nm_spmm,
+    osparse_matmul,
+    w8a8_matmul,
+)
 
-__all__ = ["nm_prune", "nm_spmm", "w8a8_matmul", "flash_attention_pallas"]
+__all__ = [
+    "nm_prune",
+    "nm_prune_matmul",
+    "nm_spmm",
+    "osparse_matmul",
+    "w8a8_matmul",
+    "flash_attention_pallas",
+]

@@ -12,9 +12,13 @@ VPU, but tiny matmuls run on the MXU at full utilization.  Cost per tile:
   selection:  bt·D·n + D·n·bo     (≈ n/m · bo⁻¹ relative overhead)
   main GEMM:  bt·(D·n/m)·bo       (the (M/N)× win)
 
-Grid: (T/bt, N_out/bo); each kernel instance sees the full reduction depth
-D (VMEM: bt·D + D·bo + compacted operands — fits comfortably for
-D ≤ 8192 at bf16 with bt = bo = 256).
+Grid: (T/bt, N_out/bo, D/bk) with a float32 accumulator scratch.  The
+consensus selection is *local to each group of M channels* (the tile-L2
+pool is per-channel), so k-blocking the reduction depth is exact: each
+k-step selects inside its own groups and accumulates its partial product.
+VMEM residency per instance is bt·bk + bk·bo + compacted operands —
+independent of D, so D = 16k+ models tile fine (the previous full-D
+BlockSpec capped out near D ≤ 8192 at bf16 and wasted VMEM below that).
 """
 from __future__ import annotations
 
@@ -24,6 +28,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.nm_prune import _select_topn_mask
 
@@ -43,18 +48,24 @@ def _selection_onehot(scores_g: jax.Array, n: int, m: int) -> jax.Array:
     return jnp.stack(cols, axis=-1)                     # (G, m, n)
 
 
-def _kernel(x_ref, w_ref, scale_ref, o_ref, *, n: int, m: int,
-            has_scale: bool):
-    x = x_ref[...]                                      # (bt, D)
-    w = w_ref[...]                                      # (D, bo)
-    bt, d = x.shape
+def _kernel(x_ref, w_ref, scale_ref, o_ref, acc_ref, *, n: int, m: int,
+            has_scale: bool, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                      # (bt, bk)
+    w = w_ref[...]                                      # (bk, bo)
+    bt, bk = x.shape
     bo = w.shape[-1]
-    g = d // m
+    g = bk // m
 
     s = jnp.abs(x.astype(jnp.float32))
     if has_scale:
         s = s * scale_ref[...].astype(jnp.float32)[None, :]
-    pooled = jnp.sqrt((s * s).sum(axis=0))              # (D,) tile-L2 pool
+    pooled = jnp.sqrt((s * s).sum(axis=0))              # (bk,) tile-L2 pool
     sel = _selection_onehot(pooled.reshape(g, m), n, m) # (G, m, n)
 
     # compact activations and weights via block-diagonal one-hot matmuls
@@ -63,13 +74,15 @@ def _kernel(x_ref, w_ref, scale_ref, o_ref, *, n: int, m: int,
     wg = w.reshape(g, m, bo).astype(jnp.float32)
     wc = jnp.einsum("gmo,gmn->gno", wg, sel).reshape(g * n, bo)
 
-    o_ref[...] = jnp.dot(
-        xc, wc, preferred_element_type=jnp.float32
-    ).astype(o_ref.dtype)
+    acc_ref[...] += jnp.dot(xc, wc, preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("n", "m", "block_t", "block_o",
-                                             "interpret"))
+                                             "block_k", "interpret"))
 def nm_spmm_pallas(
     x: jax.Array,                       # (T, D)
     w: jax.Array,                       # (D, N_out)
@@ -78,26 +91,32 @@ def nm_spmm_pallas(
     m: int,
     block_t: int = 256,                 # = consensus tile size
     block_o: int = 256,
+    block_k: int = 2048,
     interpret: bool = True,
 ) -> jax.Array:
     t, d = x.shape
     n_out = w.shape[-1]
     bt = min(block_t, t)
     bo = min(block_o, n_out)
-    assert t % bt == 0 and n_out % bo == 0 and d % m == 0, (t, d, n_out, m)
+    bk = min(block_k, d)
+    assert t % bt == 0 and n_out % bo == 0 and d % bk == 0 and bk % m == 0, (
+        t, d, n_out, bt, bo, bk, m)
+    k_steps = d // bk
     has_scale = scale is not None
     if not has_scale:
         scale = jnp.ones((d,), jnp.float32)
 
     return pl.pallas_call(
-        functools.partial(_kernel, n=n, m=m, has_scale=has_scale),
-        grid=(t // bt, n_out // bo),
+        functools.partial(_kernel, n=n, m=m, has_scale=has_scale,
+                          k_steps=k_steps),
+        grid=(t // bt, n_out // bo, k_steps),
         in_specs=[
-            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((d, bo), lambda i, j: (0, j)),
-            pl.BlockSpec((d,), lambda i, j: (0,)),
+            pl.BlockSpec((bt, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bo), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk,), lambda i, j, k: (k,)),
         ],
-        out_specs=pl.BlockSpec((bt, bo), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((bt, bo), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((t, n_out), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, bo), jnp.float32)],
         interpret=interpret,
     )(x, w, scale)

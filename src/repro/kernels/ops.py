@@ -5,7 +5,12 @@ real TPU deployment set ``REPRO_PALLAS_INTERPRET=0`` (or pass
 ``interpret=False``) and the same BlockSpecs compile to Mosaic.
 
 Wrappers handle leading-batch flattening and shape padding so callers can
-use them as drop-in linear ops.
+use them as drop-in linear ops: when no well-sized block evenly divides an
+axis, the axis is zero-padded up to the next block multiple (mirroring
+``pruner.sparse_matmul``'s token padding) and the output is sliced back.
+Zero padding is exact for every kernel here — padded tokens score zero in
+the consensus pool, padded channels form all-zero N:M groups against
+zero weight rows, and padded output columns are sliced away.
 """
 from __future__ import annotations
 
@@ -16,10 +21,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.nm_prune import nm_prune_pallas
+from repro.kernels.nm_prune_matmul import nm_prune_matmul_pallas
 from repro.kernels.nm_spmm import nm_spmm_pallas
+from repro.kernels.osparse_matmul import osparse_matmul_pallas
 from repro.kernels.w8a8_matmul import w8a8_matmul_pallas
 
-__all__ = ["nm_prune", "nm_spmm", "w8a8_matmul", "default_interpret"]
+__all__ = [
+    "nm_prune",
+    "nm_prune_matmul",
+    "nm_spmm",
+    "osparse_matmul",
+    "w8a8_matmul",
+    "default_interpret",
+]
 
 
 def default_interpret() -> bool:
@@ -32,6 +46,46 @@ def _flatten(x: jax.Array):
     for s in lead:
         t *= s
     return x.reshape(t, x.shape[-1]), lead
+
+
+def _largest_divisor(total: int, target: int,
+                     multiple_of: int = 1) -> Optional[int]:
+    """Largest divisor of ``total`` that is ≤ target and a multiple of
+    ``multiple_of``, or None when no such divisor exists."""
+    for cand in range(min(target, total), 0, -1):
+        if total % cand == 0 and cand % multiple_of == 0:
+            return cand
+    return None
+
+
+def _block_and_pad(total: int, target: int, multiple_of: int = 1):
+    """Pick a block size ≤ target (multiple of ``multiple_of``) and the
+    padded axis length it divides.
+
+    Prefers an exact divisor of ``total`` (zero padding, full occupancy);
+    when only degenerately small divisors exist (e.g. prime token counts)
+    or none is a multiple of ``multiple_of``, falls back to a full-size
+    block with zero padding up to the next block multiple.
+    """
+    div = _largest_divisor(total, target, multiple_of)
+    lim = min(total, target)
+    if div is not None and 2 * div >= lim:
+        return div, total
+    block = max(lim - lim % multiple_of, multiple_of)
+    return block, total + (-total) % block
+
+
+def _pad_to(a: jax.Array, axis: int, new_size: int, value: float = 0.0):
+    if a.shape[axis] == new_size:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, new_size - a.shape[axis])
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def _check_groups(d: int, m: int) -> None:
+    if d % m != 0:
+        raise ValueError(f"last dim {d} not divisible by group size {m}")
 
 
 def nm_prune(
@@ -47,11 +101,44 @@ def nm_prune(
     interpret = default_interpret() if interpret is None else interpret
     xf, lead = _flatten(x)
     t, d = xf.shape
-    bt = _largest_divisor(t, block_t)
-    bd = _largest_divisor(d, block_d, multiple_of=m)
+    _check_groups(d, m)
+    bt, tp = _block_and_pad(t, block_t)
+    bd, dp = _block_and_pad(d, block_d, multiple_of=m)
+    xf = _pad_to(_pad_to(xf, 0, tp), 1, dp)
+    if scale is not None:
+        scale = _pad_to(scale, 0, dp)
     y = nm_prune_pallas(xf, scale, n, m, block_t=bt, block_d=bd,
                         interpret=interpret)
-    return y.reshape(*lead, d)
+    return y[:t, :d].reshape(*lead, d)
+
+
+def nm_prune_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    scale: Optional[jax.Array],
+    n: int,
+    m: int,
+    block_t: int = 256,
+    block_o: int = 256,
+    block_k: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused per-token prune + GEMM over any (..., D) input (one X pass)."""
+    interpret = default_interpret() if interpret is None else interpret
+    xf, lead = _flatten(x)
+    t, d = xf.shape
+    n_out = w.shape[-1]
+    _check_groups(d, m)
+    bt, tp = _block_and_pad(t, block_t)
+    bo, op = _block_and_pad(n_out, block_o)
+    bk, dp = _block_and_pad(d, block_k, multiple_of=m)
+    xf = _pad_to(_pad_to(xf, 0, tp), 1, dp)
+    w = _pad_to(_pad_to(w, 0, dp), 1, op)
+    if scale is not None:
+        scale = _pad_to(scale, 0, dp)
+    y = nm_prune_matmul_pallas(xf, w, scale, n, m, block_t=bt, block_o=bo,
+                               block_k=bk, interpret=interpret)
+    return y[:t, :n_out].reshape(*lead, n_out)
 
 
 def nm_spmm(
@@ -62,18 +149,73 @@ def nm_spmm(
     m: int,
     tile: int = 256,
     block_o: int = 256,
+    block_k: int = 2048,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Tile-consensus compacted matmul over any (..., D) input."""
+    """Tile-consensus compacted matmul over any (..., D) input.
+
+    The token block IS the consensus tile (one shared channel set per bt
+    tokens), so ``tile`` is semantic, not a free tiling parameter: the
+    block is always ``min(tile, t)`` with zero-padding up to a tile
+    multiple — exactly ``pruner.sparse_matmul``'s tiling, never a smaller
+    divisor (which would change which tokens vote in each pool).
+    """
     interpret = default_interpret() if interpret is None else interpret
     xf, lead = _flatten(x)
     t, d = xf.shape
     n_out = w.shape[-1]
-    bt = _largest_divisor(t, tile)
-    bo = _largest_divisor(n_out, block_o)
+    _check_groups(d, m)
+    bt = min(tile, t)
+    tp = t + (-t) % bt
+    bo, op = _block_and_pad(n_out, block_o)
+    bk, dp = _block_and_pad(d, block_k, multiple_of=m)
+    xf = _pad_to(_pad_to(xf, 0, tp), 1, dp)
+    w = _pad_to(_pad_to(w, 0, dp), 1, op)
+    if scale is not None:
+        scale = _pad_to(scale, 0, dp)
     y = nm_spmm_pallas(xf, w, scale, n, m, block_t=bt, block_o=bo,
-                       interpret=interpret)
-    return y.reshape(*lead, n_out)
+                       block_k=bk, interpret=interpret)
+    return y[:t, :n_out].reshape(*lead, n_out)
+
+
+def osparse_matmul(
+    x: jax.Array,
+    wq: jax.Array,
+    smooth: jax.Array,
+    amber: Optional[jax.Array],
+    w_scale: jax.Array,
+    n: int,
+    m: int,
+    act_scale: Optional[jax.Array] = None,
+    per_token: bool = False,
+    block_t: int = 256,
+    block_o: int = 256,
+    block_k: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused Outstanding-sparse projection over any (..., D) input.
+
+    Returns float32 (dequantized) — callers cast back to the model dtype,
+    matching ``quant.quantized_matmul``.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    xf, lead = _flatten(x)
+    t, d = xf.shape
+    n_out = wq.shape[-1]
+    _check_groups(d, m)
+    bt, tp = _block_and_pad(t, block_t)
+    bo, op = _block_and_pad(n_out, block_o)
+    bk, dp = _block_and_pad(d, block_k, multiple_of=m)
+    xf = _pad_to(_pad_to(xf, 0, tp), 1, dp)
+    wq = _pad_to(_pad_to(wq, 0, dp), 1, op)
+    smooth = _pad_to(smooth, 0, dp, value=1.0)  # padded channels: 0/1 = 0
+    w_scale = _pad_to(w_scale, 0, op)
+    if amber is not None:
+        amber = _pad_to(amber, 0, dp)
+    y = osparse_matmul_pallas(xf, wq, smooth, amber, w_scale, act_scale,
+                              n, m, per_token=per_token, block_t=bt,
+                              block_o=bo, block_k=bk, interpret=interpret)
+    return y[:t, :n_out].reshape(*lead, n_out)
 
 
 def w8a8_matmul(
@@ -87,20 +229,12 @@ def w8a8_matmul(
     xf, lead = _flatten(xq)
     t, d = xf.shape
     n_out = wq.shape[-1]
-    bt = _largest_divisor(t, 256)
-    bo = _largest_divisor(n_out, 256)
-    bk = _largest_divisor(d, 512)
+    bt, tp = _block_and_pad(t, 256)
+    bo, op = _block_and_pad(n_out, 256)
+    bk, dp = _block_and_pad(d, 512)
+    xf = _pad_to(_pad_to(xf, 0, tp), 1, dp)
+    wq = _pad_to(_pad_to(wq, 0, dp), 1, op)
+    w_scale = _pad_to(w_scale, 0, op)
     y = w8a8_matmul_pallas(xf, wq, x_scale, w_scale, block_t=bt, block_o=bo,
                            block_k=bk, interpret=interpret)
-    return y.reshape(*lead, n_out)
-
-
-def _largest_divisor(total: int, target: int, multiple_of: int = 1) -> int:
-    """Largest divisor of ``total`` that is ≤ target and a multiple of
-    ``multiple_of`` (falls back to ``multiple_of`` blocks)."""
-    best = multiple_of
-    for cand in range(min(target, total), multiple_of - 1, -1):
-        if total % cand == 0 and cand % multiple_of == 0:
-            best = cand
-            break
-    return max(best, 1)
+    return y[:t, :n_out].reshape(*lead, n_out)

@@ -6,8 +6,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["nm_prune_ref", "nm_spmm_ref", "w8a8_matmul_ref",
-           "flash_attention_ref"]
+__all__ = ["nm_prune_ref", "nm_prune_matmul_ref", "nm_spmm_ref",
+           "osparse_matmul_ref", "w8a8_matmul_ref", "flash_attention_ref"]
 
 
 def flash_attention_ref(
@@ -46,6 +46,44 @@ def nm_prune_ref(
 
     scores = scoring.score_activations(x, scale)
     return nm.apply_nm(x, scores, n, m)
+
+
+def nm_prune_matmul_ref(
+    x: jax.Array,                      # (T, D)
+    w: jax.Array,                      # (D, N_out)
+    scale: Optional[jax.Array],        # (D,) or None
+    n: int,
+    m: int,
+) -> jax.Array:
+    """Fused per-token prune + GEMM: score → N:M mask → dense matmul."""
+    xp = nm_prune_ref(x, scale, n, m)
+    return jnp.dot(xp.astype(jnp.float32), w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32
+                   ).astype(jnp.result_type(x.dtype, w.dtype))
+
+
+def osparse_matmul_ref(
+    x: jax.Array,                      # (T, D) raw activations
+    wq: jax.Array,                     # (D, N_out) int8
+    smooth: jax.Array,                 # (D,) SmoothQuant divide factor
+    amber: Optional[jax.Array],        # (D,) Amber channel scale or None
+    w_scale: jax.Array,                # (N_out,) f32
+    n: int,
+    m: int,
+    act_scale: Optional[jax.Array] = None,
+    per_token: bool = False,
+) -> jax.Array:
+    """Outstanding-sparse chain: smooth → prune → int8 quantize → GEMM →
+    dequant — the exact jnp composition ``layers.linear._quantized`` runs."""
+    from repro.core import quant
+
+    xs = x.astype(jnp.float32) / smooth
+    xp = nm_prune_ref(xs, amber, n, m)
+    if per_token:
+        xq, ts = quant.quantize_act_per_token(xp)
+        return quant.quantized_matmul(xq, wq, ts, w_scale)
+    xq = quant.quantize_act_per_tensor(xp, act_scale)
+    return quant.quantized_matmul(xq, wq, act_scale, w_scale)
 
 
 def nm_spmm_ref(

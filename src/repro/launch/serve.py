@@ -17,6 +17,9 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--sparsity", default="8:16")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--pallas-kernels", action="store_true",
+                    help="route sparse projections through the fused Pallas "
+                         "kernels (REPRO_PALLAS_INTERPRET=0 on real TPUs)")
     args = ap.parse_args(argv)
 
     import time
@@ -35,7 +38,8 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(0))
 
     n, m = (int(x) for x in args.sparsity.split(":"))
-    policy = paper_policy(n, m, cfg.qgate_skip_layers)
+    policy = paper_policy(n, m, cfg.qgate_skip_layers,
+                          use_pallas_kernels=args.pallas_kernels)
     params = precompute_scales(params, policy)  # offline Robust-Norm scales
 
     scfg = ServeConfig(max_seq=args.prompt_len + args.new_tokens + 8,

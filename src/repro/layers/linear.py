@@ -7,6 +7,10 @@ Dispatch order per call (all static except the per-layer skip flag):
   2. prunable?    (policy says this module is pruned in this phase)
   3. mode:        per-token N:M mask (paper-faithful) or tile-consensus
                    compacted matmul (TPU-native, DESIGN.md §2)
+  4. backend:     ``policy.use_pallas_kernels`` lowers the pruned matmul /
+                   Outstanding-sparse chain to one fused pallas_call
+                   (``repro.kernels.ops``); the jnp forms below remain the
+                   bit-exact oracle and the ``layer_flag`` fallback
 
 ``layer_flag`` supports ``lax.scan``-stacked layers: the per-layer q/gate
 skip list becomes a boolean vector scanned alongside the weights, selecting
@@ -52,14 +56,35 @@ def dense_linear(x: jax.Array, p: Dict[str, jax.Array]) -> jax.Array:
 
 def _quantized(x: jax.Array, p: Dict[str, jax.Array], prune: bool,
                policy: SparsityPolicy, layer_flag) -> jax.Array:
-    """Outstanding-sparse path: smooth → (prune) → int8 matmul."""
+    """Outstanding-sparse path: smooth → (prune) → int8 matmul.
+
+    With ``policy.use_pallas_kernels`` the whole chain collapses into one
+    fused ``osparse_matmul`` pallas_call (no smoothed/masked/quantized
+    copies in HBM).  ``layer_flag`` models keep the jnp mask-select form —
+    the flag picks pruned vs dense *input*, which the fused GEMM cannot
+    express without computing both.
+    """
+    per_token = bool(p.get("per_token", False))
+    if prune and layer_flag is None and policy.use_pallas_kernels:
+        from repro.kernels import ops
+
+        y = ops.osparse_matmul(
+            x, p["wq"], p["smooth"], p.get(SCALE_KEY), p["w_scale"],
+            policy.n, policy.m,
+            act_scale=None if per_token else p["act_scale"],
+            per_token=per_token)
+        y = y.astype(x.dtype)
+        if "b" in p:
+            y = y + p["b"]
+        return y
+
     xs = x.astype(jnp.float32) / p["smooth"]
     if prune:
         xp = pruner.prune_input(xs, p.get(SCALE_KEY), policy)
         if layer_flag is not None:
             xp = jnp.where(layer_flag, xp, xs)
         xs = xp
-    if bool(p.get("per_token", False)):
+    if per_token:
         xq, ts = quant.quantize_act_per_token(xs)
         y = quant.quantized_matmul(xq, p["wq"], ts, p["w_scale"])
     else:
@@ -97,9 +122,20 @@ def sparse_linear(
         return dense_linear(x, p)
 
     scale = p.get(SCALE_KEY)
+    use_fused = policy.use_pallas_kernels and layer_flag is None
     if policy.tile_consensus:
+        pol = policy if use_fused else policy.with_(use_pallas_kernels=False)
+        y = pruner.sparse_matmul(x, p["w"], scale, pol)
+        if layer_flag is not None:
+            # compacted inputs can't be element-wise selected against the
+            # dense ones, so flagged layers pick between the two outputs
+            y = jnp.where(layer_flag, y, x @ p["w"])
+    elif use_fused:
+        # fused prune+GEMM path (one pallas_call under the policy flag)
         y = pruner.sparse_matmul(x, p["w"], scale, policy)
     else:
+        # mask-select form: scan-stacked models pick pruned vs dense input
+        # with a traced per-layer flag, so the mask must be materialized
         xp = pruner.prune_input(x, scale, policy)
         if layer_flag is not None:
             xp = jnp.where(layer_flag, xp, x)

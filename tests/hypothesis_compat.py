@@ -1,0 +1,48 @@
+"""Optional-``hypothesis`` shim.
+
+The property tests use ``hypothesis``, which isn't guaranteed in every
+container image.  Importing this module yields the real ``given`` /
+``settings`` / ``st`` when the package is installed; otherwise drop-in
+stand-ins that collect each property test as a single *skipped* item (the
+plain unit tests in the same files keep running either way).
+
+Usage in a test module::
+
+    from hypothesis_compat import given, settings, st
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without the dep
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stub: every ``st.<name>(...)`` call returns an inert placeholder
+        (strategies are only ever passed into ``given``, never evaluated)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # Replace with a zero-arg skipped test: the original signature
+            # holds strategy parameter names pytest would misread as
+            # fixtures.
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():
+                pass  # pragma: no cover
+
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+
+        return deco
