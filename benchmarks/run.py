@@ -21,7 +21,7 @@ import sys
 import time
 
 TABLES = ("coverage", "table1", "table2", "table3", "appendix_a",
-          "sensitivity", "kernels")
+          "sensitivity", "kernels", "serving")
 
 
 def _parse_row(row: str):
@@ -55,8 +55,8 @@ def main(argv=None) -> int:
     selected = args.only.split(",") if args.only else list(TABLES)
 
     from benchmarks import (appendix_a_weight_vs_act, coverage, kernel_bench,
-                            sensitivity_scan, table1_amber, table2_osparse,
-                            table3_generation)
+                            sensitivity_scan, serving, table1_amber,
+                            table2_osparse, table3_generation)
 
     runners = {
         "coverage": coverage.run,
@@ -66,6 +66,7 @@ def main(argv=None) -> int:
         "appendix_a": appendix_a_weight_vs_act.run,
         "sensitivity": sensitivity_scan.run,
         "kernels": kernel_bench.run,
+        "serving": serving.run,
     }
 
     print("name,us_per_call,derived")

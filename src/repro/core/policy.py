@@ -75,11 +75,20 @@ class SparsityPolicy:
     use_pallas_kernels: bool = False
 
     def __post_init__(self):
-        if self.m % max(self.n, 1) != 0 and self.n != self.m:
-            # N:M with N not dividing M is legal (e.g. 3:8); nothing to check
-            pass
-        if self.enabled and not (0 < self.n <= self.m):
+        # N with N not dividing M is legal (e.g. 3:8) — the only structural
+        # requirements are integer 0 < N ≤ M, checked even when disabled so
+        # a bad policy cannot lie dormant behind ``enabled=False``
+        import numbers
+        if not (isinstance(self.n, numbers.Integral)
+                and isinstance(self.m, numbers.Integral)
+                and 0 < self.n <= self.m):
             raise ValueError(f"bad N:M {self.n}:{self.m}")
+        from repro.core.scoring import SCORE_MODES
+        if self.score_mode not in SCORE_MODES:
+            raise ValueError(f"unknown score_mode {self.score_mode!r}; "
+                             f"expected one of {SCORE_MODES}")
+        if self.tile_size < 1:
+            raise ValueError(f"tile_size must be >= 1, got {self.tile_size}")
         # freeze the mapping for hashability
         object.__setattr__(
             self,

@@ -1,7 +1,15 @@
-"""Serving driver: Amber-sparse prefill, dense decode, batched requests.
+"""Serving driver: Amber-sparse prefill, dense decode.
+
+One-shot batch mode (legacy):
 
     PYTHONPATH=src python -m repro.launch.serve \
         --arch qwen2_7b --smoke --sparsity 8:16 --batch 4 --new-tokens 32
+
+Continuous-batching trace mode — Poisson arrivals through the scheduler,
+reporting throughput, per-request latency, and retrace counts:
+
+    PYTHONPATH=src python -m repro.launch.serve --smoke --trace \
+        --num-requests 16 --rate 0.5 --len-range 8:48 --slots 4 --chunk 16
 """
 from __future__ import annotations
 
@@ -20,6 +28,20 @@ def main(argv=None):
     ap.add_argument("--pallas-kernels", action="store_true",
                     help="route sparse projections through the fused Pallas "
                          "kernels (REPRO_PALLAS_INTERPRET=0 on real TPUs)")
+    ap.add_argument("--trace", action="store_true",
+                    help="continuous-batching driver: Poisson request "
+                         "arrivals, mixed prompt lengths, per-request "
+                         "latency + throughput + retrace report")
+    ap.add_argument("--num-requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="mean arrivals per scheduler iteration (Poisson)")
+    ap.add_argument("--len-range", default="8:48",
+                    help="uniform prompt-length range lo:hi for --trace")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="KV-cache slots (decode batch bucket)")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="prefill chunk size (prefill shape bucket)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     import time
@@ -41,6 +63,9 @@ def main(argv=None):
     policy = paper_policy(n, m, cfg.qgate_skip_layers,
                           use_pallas_kernels=args.pallas_kernels)
     params = precompute_scales(params, policy)  # offline Robust-Norm scales
+
+    if args.trace:
+        return _trace_mode(args, cfg, model, params, policy)
 
     scfg = ServeConfig(max_seq=args.prompt_len + args.new_tokens + 8,
                        temperature=args.temperature)
@@ -74,6 +99,64 @@ def main(argv=None):
                                            max_new_tokens=args.new_tokens)
              ["tokens"]).mean()
     print(f"greedy-decode agreement dense vs sparse-prefill: {float(agree):.3f}")
+    return 0
+
+
+def _trace_mode(args, cfg, model, params, policy):
+    """Poisson-arrival request stream through the continuous scheduler."""
+    import jax
+    import numpy as np
+
+    from repro.serve.continuous import (ContinuousConfig,
+                                        ContinuousServingEngine)
+
+    rng = np.random.default_rng(args.seed)
+    lo, hi = (int(x) for x in args.len_range.split(":"))
+    gaps = rng.exponential(1.0 / max(args.rate, 1e-9), args.num_requests)
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    lens = rng.integers(lo, hi + 1, args.num_requests)
+    max_seq = hi + args.new_tokens + 8
+
+    eng = ContinuousServingEngine(model, policy, ContinuousConfig(
+        max_seq=max_seq, num_slots=args.slots, chunk_size=args.chunk,
+        temperature=args.temperature, seed=args.seed))
+    extras = {}
+    for i in range(args.num_requests):
+        toks = np.asarray(jax.random.randint(
+            jax.random.PRNGKey(100 + i), (int(lens[i]),), 0, cfg.vocab_size))
+        rid = eng.submit(toks, max_new_tokens=args.new_tokens,
+                         arrival=int(arrivals[i]))
+        ex = {}
+        if cfg.is_encdec:
+            ex["frame_embeds"] = np.asarray(jax.random.normal(
+                jax.random.PRNGKey(200 + i),
+                (1, cfg.encoder_seq, cfg.d_model)), np.float32)
+        if cfg.vision_stub:
+            ex["pixel_embeds"] = np.asarray(jax.random.normal(
+                jax.random.PRNGKey(300 + i),
+                (1, cfg.n_patches, cfg.d_model)), np.float32)
+        if ex:
+            extras[rid] = ex
+
+    res = eng.run(params, extras=extras)
+    m = res["metrics"]
+    print(f"# {args.num_requests} requests, λ={args.rate}/iter, "
+          f"lens {lo}..{hi}, slots={args.slots}, chunk={args.chunk}")
+    print("rid,prompt_len,arrival,first_token_iter,done_iter,"
+          "latency_iters,latency_s,n_out")
+    for r in m["requests"]:
+        print(f"{r['rid']},{r['prompt_len']},{r['arrival']},"
+              f"{r['first_token_iter']},{r['done_iter']},"
+              f"{r['latency_iters']},{r['latency_s']:.3f},{r['n_out']}")
+    lat = [r["latency_iters"] for r in m["requests"]]
+    print(f"# throughput: {m['generated_tokens']} tokens in "
+          f"{m['wall_s']:.2f}s = {m['tokens_per_s']:.1f} tok/s "
+          f"over {m['iterations']} iterations")
+    print(f"# latency iters p50/p95: {int(np.percentile(lat, 50))}/"
+          f"{int(np.percentile(lat, 95))}")
+    print(f"# traces: prefill={m['trace_counts']['prefill']} "
+          f"decode={m['trace_counts']['decode']} (shape buckets: "
+          f"chunk={args.chunk}, decode batch={args.slots})")
     return 0
 
 

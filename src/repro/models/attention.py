@@ -37,10 +37,10 @@ def _kv_chunk_attention(
     q: jax.Array,          # (B, T, Hkv, G, hd) pre-scaled
     k: jax.Array,          # (B, S, Hkv, hd)
     v: jax.Array,          # (B, S, Hkv, hd)
-    q_pos: jax.Array,      # (T,) absolute positions of queries
+    q_pos: jax.Array,      # (T,) or (B, T) absolute positions of queries
     causal: bool,
     window: Optional[int],
-    kv_len: Optional[jax.Array],
+    kv_len: Optional[jax.Array],  # scalar or (B,) valid-slot counts
     kv_pos_base: jax.Array,  # (S,) absolute positions of cache slots
     chunk: int,
 ) -> jax.Array:
@@ -75,14 +75,19 @@ def _kv_chunk_attention(
         s = jnp.einsum(
             "bthgd,bchd->bthgc", q, kci, preferred_element_type=jnp.float32
         )                                                   # (B,T,Hkv,G,c)
-        valid = pci >= 0
+        # mask is built in (B', T', c) layout with B'/T' ∈ {1, full} so both
+        # scalar (shared) and per-row (slot-batched decode) kv_len / q_pos
+        # broadcast against the (B, T, Hkv, G, c) score tile
+        qp = q_pos if q_pos.ndim == 2 else q_pos[None, :]     # (B'|1, T)
+        mask = (pci >= 0)[None, None, :]                      # (1, 1, c)
         if kv_len is not None:
-            valid = valid & (sloti < kv_len)
-        mask = valid[None, None, None, None, :]
+            kvl = jnp.asarray(kv_len).reshape(-1, 1, 1)       # (B'|1, 1, 1)
+            mask = mask & (sloti[None, None, :] < kvl)
         if causal:
-            mask = mask & (pci[None, :] <= q_pos[:, None])[None, :, None, None, :]
+            mask = mask & (pci[None, None, :] <= qp[:, :, None])
         if window is not None:
-            mask = mask & (pci[None, :] > (q_pos[:, None] - window))[None, :, None, None, :]
+            mask = mask & (pci[None, None, :] > (qp[:, :, None] - window))
+        mask = mask[:, :, None, None, :]
         s = jnp.where(mask, s, _NEG)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
@@ -170,7 +175,10 @@ def attention(
 
     Args:
       q_offset:     absolute position of q[0] (decode: current cache length).
+                    May be a (B,) vector when every batch row sits at its own
+                    position (slot-batched continuous decode).
       kv_len:       number of valid cache slots (decode against padded cache).
+                    Scalar or (B,) per-row vector.
       kv_positions: absolute position of every cache slot (ring buffers);
                     defaults to arange(S).
       window:       sliding-window size (swa/local); None = full.
@@ -183,8 +191,13 @@ def attention(
     Hkv = k.shape[2]
     G = Hq // Hkv
 
+    # static "whole-sequence from position 0" check: offset-prefill /
+    # slot-batched callers pass traced (or vector) offsets and must take the
+    # masked chunked path
+    from_zero = isinstance(q_offset, int) and q_offset == 0
+
     if (impl == "flash" and T == S and T > 1 and window is None
-            and kv_len is None and kv_positions is None):
+            and kv_len is None and kv_positions is None and from_zero):
         from repro.kernels.flash_attention import flash_attention_pallas
 
         # expand GQA KV to full heads for the single-head-stream kernel
@@ -197,9 +210,12 @@ def attention(
         return o.transpose(0, 2, 1, 3).astype(q.dtype)
 
     qg = (q * hd**-0.5).reshape(B, T, Hkv, G, hd)
-    q_pos = q_offset + jnp.arange(T)
+    qo = jnp.asarray(q_offset)
+    q_pos = (qo[:, None] + jnp.arange(T)[None, :] if qo.ndim == 1
+             else qo + jnp.arange(T))
 
-    if window is not None and T == S and T > 1 and causal and kv_len is None:
+    if (window is not None and T == S and T > 1 and causal and kv_len is None
+            and kv_positions is None and from_zero):
         w = min(window, S)
         out = _banded_attention(qg, k, v, w, chunk)
     else:

@@ -23,7 +23,8 @@ from repro.layers.linear import init_linear, sparse_linear
 from repro.models import common
 from repro.models.attention import attention
 
-__all__ = ["init_params", "forward", "init_cache", "prefill", "decode_step"]
+__all__ = ["init_params", "forward", "init_cache", "prefill", "prefill_chunk",
+           "decode_step"]
 
 
 def _init_ff(cfg, rng, dtype):
@@ -125,8 +126,16 @@ def _encode(cfg, params, frame_embeds, policy, phase):
     return common.norm_apply(h, params["enc_norm"], cfg.norm)
 
 
-def _decode_blocks(cfg, params, h, enc_out, policy, phase, cache, pos):
-    """Runs the decoder stack.  cache None → training path (full seq)."""
+def _decode_blocks(cfg, params, h, enc_out, policy, phase, cache, pos,
+                   chunk_len=None):
+    """Runs the decoder stack.  cache None → training path (full seq).
+
+    ``chunk_len`` (traced, prefill-with-cache only) enables offset writes:
+    the chunk's first ``chunk_len`` tokens land at cache rows
+    ``pos .. pos+chunk_len`` and attend over the whole cached prefix.  With
+    ``enc_out`` None the cached cross-KV is reused (chunks after the first).
+    ``pos`` may be a (B,) vector in single-token decode (slot batching).
+    """
     b, t, _ = h.shape
 
     def body(h_c, xs):
@@ -137,10 +146,28 @@ def _decode_blocks(cfg, params, h, enc_out, policy, phase, cache, pos):
         if cache is None:
             o = attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
         elif t == 1:
-            ck = jax.lax.dynamic_update_slice_in_dim(cc["self_k"], k, pos, axis=1)
-            cv = jax.lax.dynamic_update_slice_in_dim(cc["self_v"], v, pos, axis=1)
+            s_c = cc["self_k"].shape[1]
+            if jnp.ndim(pos) == 1:
+                bidx = jnp.arange(b)
+                ck = cc["self_k"].at[bidx, pos].set(k[:, 0], mode="drop")
+                cv = cc["self_v"].at[bidx, pos].set(v[:, 0], mode="drop")
+            else:
+                ck = jax.lax.dynamic_update_slice_in_dim(cc["self_k"], k, pos,
+                                                         axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(cc["self_v"], v, pos,
+                                                         axis=1)
             o = attention(q, ck, cv, causal=False, q_offset=pos,
-                          kv_len=pos + 1, chunk=cfg.attn_chunk)
+                          kv_len=jnp.minimum(pos + 1, s_c),
+                          chunk=cfg.attn_chunk)
+            new_cc.update(self_k=ck, self_v=cv)
+        elif chunk_len is not None:  # chunked prefill at offset pos
+            s_c = cc["self_k"].shape[1]
+            i = jnp.arange(t)
+            idx = jnp.where(i < chunk_len, pos + i, s_c)   # pad rows dropped
+            ck = cc["self_k"].at[:, idx].set(k, mode="drop")
+            cv = cc["self_v"].at[:, idx].set(v, mode="drop")
+            o = attention(q, ck, cv, causal=True, q_offset=pos,
+                          kv_len=pos + chunk_len, chunk=cfg.attn_chunk)
             new_cc.update(self_k=ck, self_v=cv)
         else:  # prefill
             o = attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
@@ -151,9 +178,10 @@ def _decode_blocks(cfg, params, h, enc_out, policy, phase, cache, pos):
                           "o_proj", policy, phase)
         h_c = h_c + o
 
-        # cross attention
+        # cross attention: reuse the cached encoder KV whenever no fresh
+        # encoder output is supplied (decode steps and prefill chunks > 0)
         xx = common.norm_apply(h_c, pp["ln_x"], cfg.norm)
-        if cache is not None and t == 1:
+        if cache is not None and enc_out is None:
             qx = sparse_linear(xx, pp["cross_attn"]["q_proj"], "q_proj",
                                policy, phase)
             qx = qx.reshape(b, t, cfg.n_heads, cfg.head_dim)
@@ -221,6 +249,8 @@ def _decode_blocks(cfg, params, h, enc_out, policy, phase, cache, pos):
 def _embed_dec(cfg, params, tokens, pos0):
     b, t = tokens.shape
     h = common.embed(tokens, params["embed"])
+    if jnp.ndim(pos0) == 1:                  # per-slot positions (B,)
+        pos0 = pos0[:, None]
     pos = pos0 + jnp.broadcast_to(jnp.arange(t), (b, t))
     return h + common.sinusoidal_positions(pos, cfg.d_model).astype(h.dtype)
 
@@ -258,6 +288,31 @@ def prefill(cfg: ModelConfig, params, batch, cache, *, policy):
     h = common.norm_apply(h[:, -1:], params["dec_norm"], cfg.norm)
     logits = (h @ params["lm_head"]["w"])[:, 0]
     return logits, {"blocks": new_blocks, "pos": cache["pos"] + tokens.shape[1]}
+
+
+def prefill_chunk(cfg: ModelConfig, params, batch, cache, *, policy):
+    """Chunked prefill at the cache offset (see transformer.prefill_chunk).
+
+    The encoder runs only when ``batch`` carries ``frame_embeds`` — the
+    serving engine sends them with the first chunk of a request, which
+    populates the cross-attention KV cache; later chunks (no frame_embeds →
+    a different jit signature, hence their own trace bucket) reuse it.
+    """
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    pos = cache["pos"]
+    chunk_len = batch.get("chunk_len")
+    if chunk_len is None:
+        chunk_len = jnp.asarray(t, jnp.int32)
+    enc_out = (_encode(cfg, params, batch["frame_embeds"], policy, "prefill")
+               if "frame_embeds" in batch else None)
+    h = _embed_dec(cfg, params, tokens, pos)
+    h, new_blocks = _decode_blocks(cfg, params, h, enc_out, policy, "prefill",
+                                   cache, pos, chunk_len=chunk_len)
+    h_last = jax.lax.dynamic_slice_in_dim(h, chunk_len - 1, 1, axis=1)
+    h_last = common.norm_apply(h_last, params["dec_norm"], cfg.norm)
+    logits = (h_last @ params["lm_head"]["w"])[:, 0]
+    return logits, {"blocks": new_blocks, "pos": pos + chunk_len}
 
 
 def decode_step(cfg: ModelConfig, params, tokens, cache, *, policy):

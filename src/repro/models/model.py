@@ -40,6 +40,13 @@ class Model:
     def prefill(self, params, batch, cache, *, policy: SparsityPolicy = DENSE):
         return self._mod.prefill(self.cfg, params, batch, cache, policy=policy)
 
+    def prefill_chunk(self, params, batch, cache, *,
+                      policy: SparsityPolicy = DENSE):
+        """Fixed-shape prefill chunk at the cache offset (continuous
+        batching); ``batch["chunk_len"]`` masks the padded tail."""
+        return self._mod.prefill_chunk(self.cfg, params, batch, cache,
+                                       policy=policy)
+
     def decode_step(self, params, tokens, cache, *,
                     policy: SparsityPolicy = DENSE):
         return self._mod.decode_step(self.cfg, params, tokens, cache,

@@ -40,6 +40,7 @@ __all__ = [
     "forward",
     "init_cache",
     "prefill",
+    "prefill_chunk",
     "decode_step",
     "layer_kinds",
 ]
@@ -192,6 +193,7 @@ def _attn_block_apply(
     positions,
     positions_3d,
     flags,
+    chunk_len=None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     b, t, d = h.shape
     fl = flags or {}
@@ -225,12 +227,62 @@ def _attn_block_apply(
     else:
         s_c = cache["k"].shape[1]
         if t == 1:  # decode step: write slot, then attend over valid slots
-            slot = pos % s_c if window is not None else pos
-            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
-            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+            if jnp.ndim(pos) == 1:  # slot-batched: every row at its own pos
+                slot = pos % s_c if window is not None else pos
+                bidx = jnp.arange(b)
+                ck = cache["k"].at[bidx, slot].set(k[:, 0], mode="drop")
+                cv = cache["v"].at[bidx, slot].set(v[:, 0], mode="drop")
+            else:
+                slot = pos % s_c if window is not None else pos
+                ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot,
+                                                         axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot,
+                                                         axis=1)
             kv_len = jnp.minimum(pos + 1, s_c)
             o = attention(q, ck, cv, causal=False, window=None,
                           q_offset=pos, kv_len=kv_len, chunk=cfg.attn_chunk)
+            new_cache = {"k": ck, "v": cv}
+        elif chunk_len is not None:
+            # chunked prefill at offset ``pos``: write the chunk's valid rows
+            # into the cache first, then attend the chunk queries over the
+            # whole cached history (earlier chunks + this one).  Rows past
+            # ``chunk_len`` (padding) scatter out of bounds and are dropped;
+            # stale rows from a previous slot occupant are excluded by the
+            # kv_len / kv_positions masks.
+            i = jnp.arange(t)
+            valid_i = i < chunk_len
+            wpos = pos + i                      # absolute token positions
+            if window is not None:
+                # Ring buffer: writing the chunk first would evict older
+                # rows still inside the window of this chunk's early queries
+                # (ring size == window), so attend over [old ring ∥ fresh
+                # chunk] with explicit absolute positions, then scatter the
+                # chunk into the ring for later chunks / decode.  Row r of
+                # the old ring holds the latest position ≤ pos-1 congruent
+                # to r mod s_c (-1 = never written).
+                r_ = jnp.arange(s_c)
+                p_old = pos - 1 - ((pos - 1 - r_) % s_c)
+                kv_pos = jnp.concatenate(
+                    [jnp.where(p_old >= 0, p_old, -1),
+                     jnp.where(valid_i, wpos, -1)])
+                k_att = jnp.concatenate([cache["k"], k], axis=1)
+                v_att = jnp.concatenate([cache["v"], v], axis=1)
+                o = attention(q, k_att, v_att, causal=True, window=window,
+                              q_offset=pos, kv_positions=kv_pos,
+                              chunk=cfg.attn_chunk)
+                idx = jnp.where(valid_i, wpos % s_c, s_c)
+                ck = cache["k"].at[:, idx].set(k, mode="drop")
+                cv = cache["v"].at[:, idx].set(v, mode="drop")
+            else:
+                # full cache: write the valid rows at their absolute offsets
+                # (pad rows scatter out of bounds → dropped), then attend the
+                # chunk queries over the whole cached prefix + chunk
+                idx = jnp.where(valid_i, wpos, s_c)
+                ck = cache["k"].at[:, idx].set(k, mode="drop")
+                cv = cache["v"].at[:, idx].set(v, mode="drop")
+                o = attention(q, ck, cv, causal=True, window=None,
+                              q_offset=pos, kv_len=pos + chunk_len,
+                              chunk=cfg.attn_chunk)
             new_cache = {"k": ck, "v": cv}
         else:  # prefill: full attention, then populate the cache
             o = attention(q, k, v, causal=True, window=window, q_offset=0,
@@ -260,10 +312,10 @@ def _attn_block_apply(
 
 
 def _block_apply(cfg, kind, h, p, policy, phase, cache, pos, positions,
-                 positions_3d, flags):
+                 positions_3d, flags, chunk_len=None):
     if kind == "attn":
         return _attn_block_apply(cfg, h, p, policy, phase, cache, pos,
-                                 positions, positions_3d, flags)
+                                 positions, positions_3d, flags, chunk_len)
     if kind == "rwkv6":
         y, st = rwkv6_block(h, p["rwkv"], policy, phase, cfg.n_heads,
                             cache, flags)
@@ -334,7 +386,8 @@ def _embed_inputs(cfg: ModelConfig, params, batch) -> jax.Array:
     return h
 
 
-def _run_blocks(cfg, params, h, policy, phase, cache, positions, positions_3d):
+def _run_blocks(cfg, params, h, policy, phase, cache, positions, positions_3d,
+                chunk_len=None):
     n_per, tail = _n_periods(cfg)
     pos = cache["pos"] if cache is not None else jnp.zeros((), jnp.int32)
     period_flags, tail_flags = _build_flags(cfg, policy)
@@ -349,7 +402,7 @@ def _run_blocks(cfg, params, h, policy, phase, cache, positions, positions_3d):
                 blk_flags = fl[f"b{j}"] if fl is not None else None
                 hh, c_out = _block_apply(cfg, kind, hh, pp[f"b{j}"], policy,
                                          phase, blk_cache, pos, positions,
-                                         positions_3d, blk_flags)
+                                         positions_3d, blk_flags, chunk_len)
                 if cc is not None:
                     cc_new[f"b{j}"] = c_out
             return hh, cc_new
@@ -449,7 +502,7 @@ def _run_blocks(cfg, params, h, policy, phase, cache, positions, positions_3d):
             blk_flags = tail_flags[f"t{j}"] if tail_flags is not None else None
             h, c_out = _block_apply(cfg, kind, h, params["tail"][f"t{j}"],
                                     policy, phase, blk_cache, pos, positions,
-                                    positions_3d, blk_flags)
+                                    positions_3d, blk_flags, chunk_len)
             if cache is not None:
                 new_cache.setdefault("tail", {})[f"t{j}"] = c_out
 
@@ -518,6 +571,51 @@ def prefill(
     return logits, new_cache
 
 
+def prefill_chunk(
+    cfg: ModelConfig,
+    params: Dict,
+    batch: Dict,
+    cache: Dict,
+    *,
+    policy: SparsityPolicy,
+) -> Tuple[jax.Array, Dict]:
+    """One fixed-shape prefill chunk written at the cache offset ``pos``.
+
+    ``batch["tokens"]`` is ``(B, C)``; ``batch["chunk_len"]`` (traced scalar,
+    default C) marks how many leading tokens are valid — the padded tail is
+    masked out of both the KV writes and the attention.  The chunk attends
+    causally over everything the cache already holds (earlier chunks of the
+    same request), so feeding a prompt through in C-token chunks reproduces
+    the one-shot prefill.  Recurrent blocks (rwkv6 / rglru) carry their state
+    through the cache but cannot mask padded tokens out of their scans — for
+    those archs the caller must send fully-valid chunks (chunk_len == C; the
+    serving engine decomposes prompts dyadically to guarantee it).
+
+    Returns (logits of the last *valid* token (B, V), cache with
+    ``pos += chunk_len``).
+    """
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    pos = cache["pos"]
+    chunk_len = batch.get("chunk_len")
+    if chunk_len is None:
+        chunk_len = jnp.asarray(t, jnp.int32)
+    positions = pos + jnp.broadcast_to(jnp.arange(t), (b, t))
+    positions_3d = (
+        pos + jnp.broadcast_to(jnp.arange(t), (3, b, t))
+        if cfg.rope_variant == "mrope" else None
+    )
+    if cfg.rope_variant == "sinusoidal":
+        batch = dict(batch, positions=positions)
+    h = _embed_inputs(cfg, params, batch)
+    h, new_cache = _run_blocks(cfg, params, h, policy, "prefill", cache,
+                               positions, positions_3d, chunk_len=chunk_len)
+    new_cache["pos"] = pos + chunk_len
+    h_last = jax.lax.dynamic_slice_in_dim(h, chunk_len - 1, 1, axis=1)
+    logits = _lm_logits(cfg, params, h_last)[:, 0]
+    return logits, new_cache
+
+
 def decode_step(
     cfg: ModelConfig,
     params: Dict,
@@ -526,13 +624,26 @@ def decode_step(
     *,
     policy: SparsityPolicy,
 ) -> Tuple[jax.Array, Dict]:
-    """One decode step.  → ((B, V) logits, updated cache)."""
+    """One decode step.  → ((B, V) logits, updated cache).
+
+    ``cache["pos"]`` may be a scalar (whole batch in lockstep, legacy
+    one-shot engine) or a (B,) vector of per-slot positions (continuous
+    batching: every slot decodes at its own depth).
+    """
     b, t = tokens.shape
     pos = cache["pos"]
-    positions = jnp.broadcast_to(pos, (b, t))
-    positions_3d = (
-        jnp.broadcast_to(pos, (3, b, t)) if cfg.rope_variant == "mrope" else None
-    )
+    if jnp.ndim(pos) == 1:
+        positions = jnp.broadcast_to(pos[:, None], (b, t))
+        positions_3d = (
+            jnp.broadcast_to(pos[None, :, None], (3, b, t))
+            if cfg.rope_variant == "mrope" else None
+        )
+    else:
+        positions = jnp.broadcast_to(pos, (b, t))
+        positions_3d = (
+            jnp.broadcast_to(pos, (3, b, t)) if cfg.rope_variant == "mrope"
+            else None
+        )
     batch = {"tokens": tokens, "positions": positions}
     h = _embed_inputs(cfg, params, batch)
     h, new_cache = _run_blocks(cfg, params, h, policy, "decode", cache,

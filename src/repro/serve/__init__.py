@@ -1,3 +1,6 @@
+from repro.serve.continuous import (ContinuousConfig, ContinuousServingEngine,
+                                    Request)
 from repro.serve.engine import ServeConfig, ServingEngine
 
-__all__ = ["ServeConfig", "ServingEngine"]
+__all__ = ["ServeConfig", "ServingEngine", "ContinuousConfig",
+           "ContinuousServingEngine", "Request"]

@@ -1,0 +1,298 @@
+"""Continuous-batching serving engine: chunked Amber-sparse prefill
+interleaved with slot-batched dense decode.
+
+Requests arrive asynchronously (:meth:`ContinuousServingEngine.submit`) and
+are scheduled over a fixed pool of KV-cache **slots**.  Each scheduler
+iteration:
+
+  1. **admit** — waiting requests whose arrival time has passed claim free
+     slots (FCFS); the slot's cache rows and recurrent state are zeroed;
+  2. **prefill** — the oldest admitted-but-unprefilled request advances by
+     one fixed-size token chunk through the Amber-sparse projection path
+     (``model.prefill_chunk``), writing KV at its cache offset;
+  3. **decode** — all slots holding decoding requests take one dense decode
+     step as a single padded batch (inactive slots are masked out of the
+     cache update).
+
+Shape buckets: prefill compiles once per chunk shape (a single
+``chunk_size`` bucket for attention archs; a dyadic ladder of at most
+log2(chunk_size)+1 sizes for archs with recurrent blocks, whose scans
+cannot mask padded tokens), and decode compiles once for the padded
+``num_slots`` batch — arbitrary traffic never retraces.  The
+``trace_counts`` attribute counts actual retraces per phase and is asserted
+in the test suite.
+
+Equivalence: with greedy decoding and **per-token** sparsity modes the
+per-request output stream is token-identical to the legacy one-shot
+:class:`~repro.serve.engine.ServingEngine` — a token's N:M mask doesn't
+depend on which chunk carries it, chunked prefill attends over the cached
+prefix so logits match, and decode rows are independent of batch
+composition.  ``tile_consensus`` policies remain valid N:M serving but are
+NOT bit-identical to one-shot prefill: their masks are pooled over token
+tiles, and chunking changes tile membership (see serve/README.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import DENSE, SparsityPolicy
+from repro.serve import slots as slot_ops
+
+__all__ = ["ContinuousConfig", "Request", "ContinuousServingEngine"]
+
+WAITING, PREFILL, DECODE, DONE = "waiting", "prefill", "decode", "done"
+
+
+@dataclasses.dataclass(frozen=True)
+class ContinuousConfig:
+    max_seq: int = 512        # per-slot KV capacity (prompt + new tokens)
+    num_slots: int = 4        # decode batch width (the padded batch bucket)
+    chunk_size: int = 64      # prefill chunk bucket (tokens per chunk)
+    temperature: float = 0.0  # 0 → greedy
+    eos_token: int = -1       # -1 → never stop early
+    seed: int = 0
+    max_iters: int = 100_000  # scheduler-loop safety valve
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray                 # (T,) prompt token ids
+    max_new_tokens: int
+    arrival: int = 0                   # scheduler iteration of arrival
+    # --- runtime (engine-owned) ---
+    state: str = WAITING
+    slot: int = -1
+    filled: int = 0                    # prompt tokens prefilled so far
+    cur: int = 0                       # last generated token (decode input)
+    out: List[int] = dataclasses.field(default_factory=list)
+    admitted_iter: int = -1
+    first_token_iter: int = -1
+    done_iter: int = -1
+    arrival_time: float = -1.0         # wall clock when arrival was reached
+    done_time: float = 0.0             # wall-clock latency from arrival
+
+
+def _dyadic_sizes(length: int, cap: int) -> List[int]:
+    """Descending powers of two ≤ cap summing to length (exact chunks)."""
+    sizes = []
+    c = 1
+    while c * 2 <= cap:
+        c *= 2
+    rem = length
+    while rem:
+        while c > rem:
+            c //= 2
+        sizes.append(c)
+        rem -= c
+    return sizes
+
+
+class ContinuousServingEngine:
+    """Scheduler + slot cache + shape-bucketed jitted phases."""
+
+    def __init__(self, model, policy: SparsityPolicy = DENSE,
+                 cfg: ContinuousConfig = ContinuousConfig()):
+        self.model = model
+        self.policy = policy
+        self.cfg = cfg
+        mcfg = model.cfg
+        if getattr(mcfg, "vision_stub", False):
+            assert cfg.chunk_size >= mcfg.n_patches, (
+                "chunk_size must cover the VLM patch stub "
+                f"({cfg.chunk_size} < {mcfg.n_patches})")
+        # recurrent scans cannot mask padded tokens out of their state, so
+        # hybrid/SSM archs get exact dyadic chunks instead of a padded tail
+        if mcfg.is_encdec:
+            self._exact_chunks = False
+        else:
+            from repro.models.transformer import layer_kinds
+            self._exact_chunks = any(k != "attn" for k in layer_kinds(mcfg))
+        if mcfg.attn_type in ("swa", "local"):
+            assert cfg.chunk_size <= min(mcfg.window, cfg.max_seq), (
+                "chunk_size must fit the sliding-window ring buffer")
+
+        self.requests: List[Request] = []
+        self._free_slots = list(range(cfg.num_slots))
+        self._slot_req: List[Optional[Request]] = [None] * cfg.num_slots
+        self.cache = None                      # built lazily per params
+        self.trace_counts: Dict[str, int] = {"prefill": 0, "decode": 0}
+        self.metrics: Dict[str, Any] = {}
+
+        def prefill_fn(params, cache, slot, tokens, chunk_len, extras):
+            self.trace_counts["prefill"] += 1      # runs at trace time only
+            sub = slot_ops.slice_slot(cache, slot)
+            batch = {"tokens": tokens, "chunk_len": chunk_len, **extras}
+            logits, sub = self.model.prefill_chunk(params, batch, sub,
+                                                   policy=self.policy)
+            return logits[0], slot_ops.write_slot(cache, slot, sub)
+
+        def decode_fn(params, cache, tokens, active, key):
+            self.trace_counts["decode"] += 1
+            logits, new_cache = self.model.decode_step(
+                params, tokens[:, None], cache, policy=DENSE)
+            new_cache = slot_ops.where_active(active, new_cache, cache)
+            nxt = self._sample(logits, key)
+            return jnp.where(active, nxt, tokens), new_cache
+
+        self._prefill_jit = jax.jit(prefill_fn)
+        self._decode_jit = jax.jit(decode_fn)
+
+    # ------------------------------------------------------------- sampling
+    def _sample(self, logits, key):
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)
+
+    # ------------------------------------------------------------ admission
+    def submit(self, tokens, max_new_tokens: int = 32, arrival: int = 0) -> int:
+        """Queue a request; returns its request id.
+
+        ``arrival`` is the scheduler iteration at which the request becomes
+        visible (simulated asynchronous traffic)."""
+        tokens = np.asarray(tokens).reshape(-1).astype(np.int32)
+        assert tokens.size > 0, "empty prompt"
+        assert tokens.size + max_new_tokens <= self.cfg.max_seq, \
+            "request exceeds slot capacity (max_seq)"
+        rid = len(self.requests)
+        self.requests.append(Request(rid=rid, tokens=tokens,
+                                     max_new_tokens=max_new_tokens,
+                                     arrival=arrival))
+        return rid
+
+    def _admit(self, it: int) -> None:
+        for req in self.requests:
+            if req.state == WAITING and req.arrival <= it and self._free_slots:
+                slot = self._free_slots.pop(0)
+                self.cache = slot_ops.reset_slot(self.cache, slot)
+                req.slot, req.state = slot, PREFILL
+                req.admitted_iter = it
+                self._slot_req[slot] = req
+
+    def _finish(self, req: Request, it: int, t0: float) -> None:
+        req.state = DONE
+        req.done_iter = it
+        anchor = req.arrival_time if req.arrival_time >= 0 else t0
+        req.done_time = time.perf_counter() - anchor
+        self._free_slots.append(req.slot)
+        self._slot_req[req.slot] = None
+
+    def clear(self) -> None:
+        """Drop completed requests (e.g. after a warmup pass) so a fresh
+        stream can be submitted and measured on the already-compiled
+        engine."""
+        assert all(r.state == DONE for r in self.requests), \
+            "cannot clear with requests in flight"
+        self.requests = []
+
+    # ------------------------------------------------------------ phases
+    def _next_chunk(self, req: Request):
+        """(tokens (1, C), chunk_len, send_extras) for the next chunk."""
+        c = self.cfg.chunk_size
+        rem = len(req.tokens) - req.filled
+        if self._exact_chunks:
+            size = _dyadic_sizes(rem, c)[0]
+            chunk = req.tokens[req.filled:req.filled + size]
+            return chunk[None, :], size, req.filled == 0
+        v = min(c, rem)
+        chunk = np.zeros((c,), np.int32)
+        chunk[:v] = req.tokens[req.filled:req.filled + v]
+        return chunk[None, :], v, req.filled == 0
+
+    def _prefill_one(self, params, req: Request, extras: Dict, it: int,
+                     t0: float, key) -> None:
+        tokens, clen, first = self._next_chunk(req)
+        ex = extras if first else {}
+        logits, self.cache = self._prefill_jit(
+            params, self.cache, jnp.asarray(req.slot, jnp.int32),
+            jnp.asarray(tokens), jnp.asarray(clen, jnp.int32), ex)
+        req.filled += clen
+        if req.filled == len(req.tokens):       # prompt ingested: sample
+            tok = int(self._sample(logits, key))
+            req.out.append(tok)
+            req.first_token_iter = it
+            if tok == self.cfg.eos_token or req.max_new_tokens == 1:
+                self._finish(req, it, t0)
+            else:
+                req.state, req.cur = DECODE, tok
+
+    def _decode_all(self, params, decoding: Sequence[Request], it: int,
+                    t0: float, key) -> None:
+        toks = np.zeros((self.cfg.num_slots,), np.int32)
+        act = np.zeros((self.cfg.num_slots,), bool)
+        for r in decoding:
+            toks[r.slot], act[r.slot] = r.cur, True
+        nxt, self.cache = self._decode_jit(
+            params, self.cache, jnp.asarray(toks), jnp.asarray(act), key)
+        nxt = np.asarray(nxt)
+        for r in decoding:
+            tok = int(nxt[r.slot])
+            r.out.append(tok)
+            r.cur = tok
+            if tok == self.cfg.eos_token or len(r.out) >= r.max_new_tokens:
+                self._finish(r, it, t0)
+
+    # ------------------------------------------------------------ main loop
+    def run(self, params, extras: Optional[Dict[int, Dict]] = None) -> Dict:
+        """Drive the scheduler until every submitted request completes.
+
+        ``extras`` maps request id → modality arrays sent with the first
+        prefill chunk (``frame_embeds`` for encdec, ``pixel_embeds`` for
+        VLM stubs).  Returns per-request outputs and aggregate metrics.
+        """
+        extras = extras or {}
+        if self.cache is None:
+            self.cache = slot_ops.init_slot_cache(
+                self.model, self.cfg.num_slots, self.cfg.max_seq)
+        key = jax.random.PRNGKey(self.cfg.seed)
+        t0 = time.perf_counter()
+        it = 0
+        while any(r.state != DONE for r in self.requests):
+            assert it < self.cfg.max_iters, "scheduler stuck"
+            now = time.perf_counter()
+            for r in self.requests:      # anchor wall-clock latency at arrival
+                if r.state == WAITING and r.arrival <= it and r.arrival_time < 0:
+                    r.arrival_time = now
+            self._admit(it)
+            prefilling = [r for r in self.requests if r.state == PREFILL]
+            if prefilling:
+                key, sub = jax.random.split(key)
+                req = prefilling[0]
+                self._prefill_one(params, req, extras.get(req.rid, {}),
+                                  it, t0, sub)
+            decoding = [r for r in self.requests if r.state == DECODE]
+            if decoding:
+                key, sub = jax.random.split(key)
+                self._decode_all(params, decoding, it, t0, sub)
+            it += 1
+        wall = time.perf_counter() - t0
+        gen = sum(len(r.out) for r in self.requests)
+        self.metrics = {
+            "iterations": it,
+            "wall_s": wall,
+            "generated_tokens": gen,
+            "tokens_per_s": gen / max(wall, 1e-9),
+            "trace_counts": dict(self.trace_counts),
+            "requests": [{
+                "rid": r.rid,
+                "prompt_len": int(len(r.tokens)),
+                "arrival": r.arrival,
+                "admitted_iter": r.admitted_iter,
+                "first_token_iter": r.first_token_iter,
+                "done_iter": r.done_iter,
+                "latency_iters": r.done_iter - r.arrival,
+                "latency_s": r.done_time,
+                "n_out": len(r.out),
+            } for r in self.requests],
+        }
+        return {
+            "outputs": {r.rid: list(r.out) for r in self.requests},
+            "metrics": self.metrics,
+        }

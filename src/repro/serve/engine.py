@@ -1,4 +1,4 @@
-"""Batched serving engine: Amber-sparse prefill + dense decode.
+"""One-shot batched serving engine: Amber-sparse prefill + dense decode.
 
 The paper's deployment story: N:M activation sparsity runs **only during
 prefill** (compute-bound), decode stays dense (memory-bound — sparsity
@@ -8,9 +8,14 @@ explicit:
     engine = ServingEngine(model, policy)
     out = engine.generate(params, prompts, max_new_tokens=64)
 
-Both phases are jitted once per shape bucket; decode runs as a
-``lax.scan`` over steps (single compiled program per bucket, no per-token
-dispatch).  Greedy or temperature sampling.
+``generate`` is the legacy whole-batch path kept as a thin compatibility
+wrapper (and as the bit-exactness oracle for the scheduler tests): every
+request in the batch must arrive together, prefill runs as one monolithic
+jit, and decode runs as a ``lax.scan`` over steps.  Production traffic —
+asynchronous arrivals, mixed prompt lengths, slot reuse — goes through
+:class:`repro.serve.continuous.ContinuousServingEngine`, which chunks the
+sparse prefill, interleaves it with slot-batched decode, and compiles each
+phase once per shape bucket (see ``serve/README.md``).
 """
 from __future__ import annotations
 

@@ -1,0 +1,113 @@
+"""Slot-axis surgery on model KV caches.
+
+The continuous engine keeps ONE cache pytree whose batch axis is the slot
+axis (``num_slots`` rows).  The model zoo stacks per-layer caches two ways:
+
+  * ``periods`` (transformer) / ``blocks`` (encdec): leaves are
+    ``(n_layers, num_slots, ...)`` — slot axis **1** (layer stacking from
+    ``vmap``/``scan`` sits in front);
+  * ``tail`` and any other subtree: leaves are ``(num_slots, ...)`` — slot
+    axis **0**.
+
+``pos`` is special: the engine stores a ``(num_slots,)`` int32 vector of
+per-slot sequence positions where the one-shot engine stores a scalar.
+
+All helpers take traced slot indices, so one jitted program serves every
+slot (no per-slot retracing).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_slot_cache", "slice_slot", "write_slot", "reset_slot",
+           "where_active"]
+
+_LAYER_STACKED = ("periods", "blocks")   # slot axis 1 under these keys
+_tmap = jax.tree_util.tree_map
+
+
+def _slot_axis(key: str) -> int:
+    return 1 if key in _LAYER_STACKED else 0
+
+
+def init_slot_cache(model, num_slots: int, max_seq: int) -> Dict[str, Any]:
+    """Model cache with the batch axis as slots and a per-slot pos vector."""
+    cache = model.init_cache(num_slots, max_seq)
+    cache["pos"] = jnp.zeros((num_slots,), jnp.int32)
+    return cache
+
+
+def slice_slot(cache: Dict[str, Any], slot) -> Dict[str, Any]:
+    """Extract slot ``slot`` as a batch-1 cache with a scalar ``pos``."""
+    out: Dict[str, Any] = {}
+    for key, sub in cache.items():
+        if key == "pos":
+            out["pos"] = jax.lax.dynamic_index_in_dim(sub, slot, 0,
+                                                      keepdims=False)
+        else:
+            ax = _slot_axis(key)
+            out[key] = _tmap(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=ax),
+                sub)
+    return out
+
+
+def write_slot(cache: Dict[str, Any], slot, sub: Dict[str, Any]) -> Dict:
+    """Write a batch-1 cache (from :func:`slice_slot`) back into the slot."""
+    out: Dict[str, Any] = {}
+    for key, full in cache.items():
+        if key == "pos":
+            out["pos"] = jax.lax.dynamic_update_index_in_dim(
+                full, sub["pos"].astype(full.dtype), slot, 0)
+        else:
+            ax = _slot_axis(key)
+            out[key] = _tmap(
+                lambda a, u: jax.lax.dynamic_update_slice_in_dim(
+                    a, u.astype(a.dtype), slot, axis=ax),
+                full, sub[key])
+    return out
+
+
+def reset_slot(cache: Dict[str, Any], slot: int) -> Dict[str, Any]:
+    """Zero one slot (host-side, static index) before admitting a request.
+
+    Attention rows are already fenced off by kv_len / kv_position masks, but
+    recurrent states (rwkv6 S / token shifts, rglru h / conv history) are
+    read as the initial state of the next prefill chunk, so they MUST be
+    cleared when a slot changes owner.
+    """
+    out: Dict[str, Any] = {}
+    for key, sub in cache.items():
+        if key == "pos":
+            out["pos"] = sub.at[slot].set(0)
+        elif _slot_axis(key) == 1:
+            out[key] = _tmap(lambda a: a.at[:, slot].set(0), sub)
+        else:
+            out[key] = _tmap(lambda a: a.at[slot].set(0), sub)
+    return out
+
+
+def where_active(active: jax.Array, new: Dict[str, Any],
+                 old: Dict[str, Any]) -> Dict[str, Any]:
+    """Per-slot select: keep ``new`` where ``active`` else ``old``.
+
+    Used after a batched decode step so that slots that are empty or still
+    prefilling are not advanced or overwritten by the decode's cache writes.
+    """
+    out: Dict[str, Any] = {}
+    for key, old_sub in old.items():
+        if key == "pos":
+            out["pos"] = jnp.where(active, new["pos"], old_sub)
+        else:
+            ax = _slot_axis(key)
+
+            def sel(n, o, ax=ax):
+                shape = [1] * o.ndim
+                shape[ax] = active.shape[0]
+                return jnp.where(active.reshape(shape), n, o)
+
+            out[key] = _tmap(sel, new[key], old_sub)
+    return out

@@ -23,6 +23,38 @@ def test_paper_policy_skip_semantics():
     hash(pol)  # static closure requirement
 
 
+def test_policy_validation_bad_nm_raises():
+    for n, m in [(0, 4), (-1, 4), (5, 4), (0, 0), (3, 0)]:
+        with pytest.raises(ValueError):
+            SparsityPolicy(n=n, m=m)
+    # a bad pattern cannot hide behind enabled=False
+    with pytest.raises(ValueError):
+        SparsityPolicy(enabled=False, n=8, m=4)
+    with pytest.raises(ValueError):
+        SparsityPolicy(score_mode="magic")
+    with pytest.raises(ValueError):
+        SparsityPolicy(tile_consensus=True, tile_size=0)
+    # non-dividing N:M is legal (3:8), as is dense N==M
+    assert SparsityPolicy(n=3, m=8).m == 8
+    assert SparsityPolicy(n=4, m=4).n == 4
+
+
+def test_policy_with_roundtrips_skip_layers():
+    pol = paper_policy(8, 16, qgate_skip_layers=(3, 7, 11))
+    # unrelated update keeps the skip map (and its semantics) intact
+    pol2 = pol.with_(n=4, m=8)
+    assert pol2.skip_layers == pol.skip_layers
+    assert not pol2.should_prune("q_proj", 7)
+    assert pol2.should_prune("q_proj", 8)
+    # identity round-trip reconstructs an equal, hashable policy
+    assert pol.with_() == pol
+    assert hash(pol.with_()) == hash(pol)
+    # updating the map itself re-freezes to the canonical tuple form
+    pol3 = pol.with_(skip_layers={"gate_proj": frozenset({1})})
+    assert pol3.should_prune("q_proj", 3)
+    assert not pol3.should_prune("gate_proj", 1)
+
+
 def test_paper_coverage_matches_published_number():
     """LLaMA3.1-8B: skip q/gate in 5 of 32 layers → 56.1% coverage (paper)."""
     d, qd, kvd, ff = 4096, 4096, 1024, 14336
