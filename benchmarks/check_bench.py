@@ -1,0 +1,73 @@
+"""CI gate over a ``BENCH_*.json`` trajectory: the latest run must carry
+every expected kernel row with a finite, positive wall-time.
+
+    PYTHONPATH=src python benchmarks/check_bench.py bench_ci.json
+
+A kernel that stops lowering under ``REPRO_PALLAS_INTERPRET=1`` (or starts
+returning NaN timings) would otherwise just drop out of the trajectory and
+the regression would go unnoticed until someone eyeballed the JSON —
+``benchmarks/run.py`` only exits non-zero on ordering-claim FAILs, not on
+missing rows.
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+from typing import List
+
+# one prefix per fused-kernel hot path benchmarked by kernel_bench.run()
+REQUIRED_KERNEL_ROWS = (
+    "kernel/nm_prune/",
+    "kernel/nm_prune_matmul/",
+    "kernel/nm_spmm/",
+    "kernel/w8a8/",
+    "kernel/osparse_matmul/",
+)
+
+
+def check_trajectory(path: str,
+                     required=REQUIRED_KERNEL_ROWS) -> List[str]:
+    """Returns a list of problems with the LATEST run in the trajectory
+    (empty = healthy)."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable trajectory ({e})"]
+    if not isinstance(data, list) or not data:
+        return [f"{path}: not a non-empty trajectory list"]
+    run = data[-1]
+    rows = run.get("rows", [])
+    errors = []
+    for prefix in required:
+        matches = [r for r in rows if str(r.get("name", "")).startswith(prefix)]
+        if not matches:
+            errors.append(f"missing kernel row {prefix}*")
+        for r in matches:
+            us = r.get("us_per_call")
+            if not (isinstance(us, (int, float)) and math.isfinite(us)
+                    and us > 0):
+                errors.append(
+                    f"{r['name']}: non-finite us_per_call {us!r}")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv if argv is None else argv
+    path = argv[1] if len(argv) > 1 else "bench_ci.json"
+    errors = check_trajectory(path)
+    if errors:
+        for e in errors:
+            print(f"BENCH CHECK FAIL: {e}")
+        return 1
+    with open(path) as f:
+        run = json.load(f)[-1]
+    print(f"bench check OK: {len(run.get('rows', []))} rows "
+          f"@ {run.get('utc', '?')} "
+          f"(tables: {','.join(run.get('tables', []))})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,7 +8,36 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_mesh_auto",
+           "abstract_mesh"]
+
+
+def make_mesh_auto(shape, axes):
+    """``jax.make_mesh`` with Auto axis types across the jax API drift.
+
+    Newer jax grew an ``axis_types`` kwarg (and ``jax.sharding.AxisType``)
+    for the explicit-sharding mode; Auto is both the new default and the
+    only behaviour older versions have, so falling back to the bare call
+    is semantically identical.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axes)
+
+
+def abstract_mesh(shape, axes):
+    """``jax.sharding.AbstractMesh`` across the positional-signature drift:
+    newer jax takes ``(shape, axis_names)``, 0.4.x takes one tuple of
+    ``(name, size)`` pairs.  Validates partition specs without devices."""
+    try:
+        return jax.sharding.AbstractMesh(shape, axes)
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,13 +49,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_auto(shape, axes)
 
 
 def make_local_mesh():
     """1×1 mesh over whatever single device the host has (tests/examples)."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_auto((n, 1), ("data", "model"))

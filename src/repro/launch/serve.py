@@ -41,6 +41,15 @@ def main(argv=None):
                     help="KV-cache slots (decode batch bucket)")
     ap.add_argument("--chunk", type=int, default=16,
                     help="prefill chunk size (prefill shape bucket)")
+    ap.add_argument("--no-paged", action="store_true",
+                    help="dense per-slot KV slab instead of the paged "
+                         "block pool")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV rows per block (paged allocator)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="global block-pool size; default covers "
+                         "slots*max_seq (no memory pressure) — size it "
+                         "lower to exercise admission gating + preemption")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -119,7 +128,9 @@ def _trace_mode(args, cfg, model, params, policy):
 
     eng = ContinuousServingEngine(model, policy, ContinuousConfig(
         max_seq=max_seq, num_slots=args.slots, chunk_size=args.chunk,
-        temperature=args.temperature, seed=args.seed))
+        temperature=args.temperature, seed=args.seed,
+        paged=not args.no_paged, block_size=args.block_size,
+        num_blocks=args.num_blocks))
     extras = {}
     for i in range(args.num_requests):
         toks = np.asarray(jax.random.randint(
@@ -143,11 +154,12 @@ def _trace_mode(args, cfg, model, params, policy):
     print(f"# {args.num_requests} requests, λ={args.rate}/iter, "
           f"lens {lo}..{hi}, slots={args.slots}, chunk={args.chunk}")
     print("rid,prompt_len,arrival,first_token_iter,done_iter,"
-          "latency_iters,latency_s,n_out")
+          "latency_iters,latency_s,n_out,preemptions")
     for r in m["requests"]:
         print(f"{r['rid']},{r['prompt_len']},{r['arrival']},"
               f"{r['first_token_iter']},{r['done_iter']},"
-              f"{r['latency_iters']},{r['latency_s']:.3f},{r['n_out']}")
+              f"{r['latency_iters']},{r['latency_s']:.3f},{r['n_out']},"
+              f"{r['preemptions']}")
     lat = [r["latency_iters"] for r in m["requests"]]
     print(f"# throughput: {m['generated_tokens']} tokens in "
           f"{m['wall_s']:.2f}s = {m['tokens_per_s']:.1f} tok/s "
@@ -157,6 +169,16 @@ def _trace_mode(args, cfg, model, params, policy):
     print(f"# traces: prefill={m['trace_counts']['prefill']} "
           f"decode={m['trace_counts']['decode']} (shape buckets: "
           f"chunk={args.chunk}, decode batch={args.slots})")
+    pg = m["paged"]
+    if pg["enabled"]:
+        print(f"# paged KV: block_size={pg['block_size']} "
+              f"pool={pg['num_blocks']} blocks "
+              f"({pg['num_blocks'] * pg['block_size']} rows vs "
+              f"{args.slots * max_seq} dense-slab rows); "
+              f"peak_in_use={pg['peak_blocks_in_use']} "
+              f"preemptions={pg['preemptions']}")
+    else:
+        print("# paged KV: disabled (dense per-slot slab)")
     return 0
 
 

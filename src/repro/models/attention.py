@@ -24,7 +24,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["attention"]
+from repro.models.common import opt_barrier
+
+__all__ = ["attention", "gather_kv_blocks", "paged_attention"]
 
 _NEG = -1e30
 
@@ -66,7 +68,7 @@ def _kv_chunk_attention(
         start = ci * c
         # the barrier stops XLA commuting convert(f32) past the slice and
         # hoisting a full-cache f32 copy out of the loop (CPU dot lowering)
-        kci, vci = jax.lax.optimization_barrier((
+        kci, vci = opt_barrier((
             jax.lax.dynamic_slice_in_dim(k, start, c, axis=1),
             jax.lax.dynamic_slice_in_dim(v, start, c, axis=1),
         ))
@@ -224,3 +226,44 @@ def attention(
             qg, k, v, q_pos, causal, window, kv_len, kv_pos, chunk
         )
     return out.reshape(B, T, Hq, hd).astype(q.dtype)
+
+
+# ------------------------------------------------------------ paged caches
+
+def gather_kv_blocks(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Contiguous logical KV view gathered from a pooled cache.
+
+    ``pool`` is ``(num_blocks, block_size, Hkv, hd)`` shared by every slot;
+    ``block_table`` is ``(B, max_blocks)`` int32 mapping each row's logical
+    block index to its physical block (``-1`` = unallocated).  Returns
+    ``(B, max_blocks * block_size, Hkv, hd)``.  Unallocated entries clip to
+    block 0 — those logical positions are ≥ the row's ``pos``, so callers
+    must fence them with ``kv_len`` exactly as they fence stale rows of a
+    dense cache.
+    """
+    nb, bs = pool.shape[:2]
+    idx = jnp.clip(block_table, 0, nb - 1)
+    g = jnp.take(pool, idx, axis=0)            # (B, max_blocks, bs, Hkv, hd)
+    b, mb = block_table.shape
+    return g.reshape(b, mb * bs, *pool.shape[2:])
+
+
+def paged_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_table: jax.Array,
+    **kwargs,
+) -> jax.Array:
+    """:func:`attention` over non-contiguous physical KV blocks.
+
+    Gathers per-row logical K/V views through the block table and runs the
+    standard online-softmax path — chunked sparse prefill at cache offsets
+    (``q_offset`` scalar) and vector-pos decode (``q_offset`` (B,)) both
+    work unchanged.  The gather materializes one logical view per call; a
+    fused Pallas paged-attention kernel that walks the table in-kernel is
+    the ROADMAP follow-up.
+    """
+    k = gather_kv_blocks(k_pool, block_table)
+    v = gather_kv_blocks(v_pool, block_table)
+    return attention(q, k, v, **kwargs)

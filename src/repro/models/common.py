@@ -19,11 +19,37 @@ __all__ = [
     "apply_rope_2d",
     "apply_mrope",
     "dtype_of",
+    "opt_barrier",
 ]
 
 
 def dtype_of(cfg) -> Any:
     return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+# ---------------------------------------------------------------- barrier
+
+@jax.custom_vjp
+def opt_barrier(x):
+    """``lax.optimization_barrier`` with an identity gradient.
+
+    The primitive has no differentiation rule on the pinned jax version,
+    which breaks training through any scan body that uses the barrier to
+    fence LICM; the barrier is the identity, so the cotangent routes
+    straight through.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+def _opt_barrier_fwd(x):
+    return opt_barrier(x), None
+
+
+def _opt_barrier_bwd(_, g):
+    return (g,)
+
+
+opt_barrier.defvjp(_opt_barrier_fwd, _opt_barrier_bwd)
 
 
 # --------------------------------------------------------------------- norms

@@ -37,6 +37,14 @@ class Model:
     def init_cache(self, batch_size: int, max_seq: int, dtype=None):
         return self._mod.init_cache(self.cfg, batch_size, max_seq, dtype)
 
+    def paged_kv_spec(self):
+        """Bool pytree marking the cache leaves that can live in a global
+        block pool (paged serving), or None when the arch has no paged
+        layout (encoder-decoder caches are request-shaped, not
+        sequence-growing)."""
+        fn = getattr(self._mod, "paged_kv_spec", None)
+        return fn(self.cfg) if fn is not None else None
+
     def prefill(self, params, batch, cache, *, policy: SparsityPolicy = DENSE):
         return self._mod.prefill(self.cfg, params, batch, cache, policy=policy)
 

@@ -29,7 +29,7 @@ from repro.configs.base import ModelConfig
 from repro.core.policy import SparsityPolicy
 from repro.layers.linear import init_linear, sparse_linear
 from repro.models import common
-from repro.models.attention import attention
+from repro.models.attention import attention, paged_attention
 from repro.models.mlp import init_mlp, mlp
 from repro.models.moe import init_moe, moe
 from repro.models.rglru import init_rglru_block, init_rglru_state, rglru_block
@@ -43,6 +43,7 @@ __all__ = [
     "prefill_chunk",
     "decode_step",
     "layer_kinds",
+    "paged_kv_spec",
 ]
 
 
@@ -159,6 +160,34 @@ def _init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int,
     raise ValueError(kind)
 
 
+def paged_kv_spec(cfg: ModelConfig) -> Dict:
+    """Bool pytree over ``init_cache``'s layer subtrees: True marks the
+    attention K/V leaves that move into the global block pool under paged
+    serving (``serve/paged.py``).
+
+    Sliding-window rings are excluded — they are already bounded by
+    ``window`` and their in-ring wraparound does not compose with block
+    tables; recurrent states (rwkv6 / rglru) are position-independent
+    per-slot state.  Callers check ``any(leaves)`` to decide whether
+    paging buys anything for the arch.
+    """
+    n_per, tail = _n_periods(cfg)
+
+    def block_spec(kind):
+        tmpl = _init_block_cache(cfg, kind, 1, 1, jnp.float32)
+        paged = kind == "attn" and cfg.attn_type not in ("swa", "local")
+        return jax.tree_util.tree_map(lambda _: paged, tmpl)
+
+    spec: Dict[str, Any] = {}
+    if n_per:
+        spec["periods"] = {f"b{j}": block_spec(kind)
+                           for j, kind in enumerate(cfg.block_pattern)}
+    if tail:
+        spec["tail"] = {f"t{j}": block_spec(cfg.block_pattern[j])
+                        for j in range(tail)}
+    return spec
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
                dtype=None) -> Dict:
     dtype = dtype or common.dtype_of(cfg)
@@ -194,6 +223,7 @@ def _attn_block_apply(
     positions_3d,
     flags,
     chunk_len=None,
+    block_table=None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     b, t, d = h.shape
     fl = flags or {}
@@ -224,6 +254,48 @@ def _attn_block_apply(
     if cache is None:
         o = attention(q, k, v, causal=True, window=window, q_offset=0,
                       chunk=cfg.attn_chunk, impl=cfg.attn_impl)
+    elif block_table is not None:
+        # paged cache: K/V live in a pooled (num_blocks, block_size, Hkv,
+        # hd) array shared by every slot; logical row p of a slot maps to
+        # flat physical row table[p // bs] * bs + p % bs.  Writes scatter
+        # through the table (unallocated / pad rows map out of bounds and
+        # drop); reads gather a contiguous logical view per row and fence
+        # stale or unallocated positions with kv_len, exactly like the
+        # dense paths below.
+        assert window is None, "paged KV does not cover sliding-window rings"
+        nb, bs_ = cache["k"].shape[0], cache["k"].shape[1]
+        mb = block_table.shape[1]
+        flat_k = cache["k"].reshape(nb * bs_, cfg.n_kv_heads, cfg.head_dim)
+        flat_v = cache["v"].reshape(nb * bs_, cfg.n_kv_heads, cfg.head_dim)
+        if t == 1:  # vector-pos decode: every row writes at its own depth
+            posv = pos if jnp.ndim(pos) == 1 else jnp.broadcast_to(pos, (b,))
+            blk = block_table[jnp.arange(b), posv // bs_]
+            flat = jnp.where(blk >= 0, blk * bs_ + posv % bs_, nb * bs_)
+            fk = flat_k.at[flat].set(k[:, 0], mode="drop")
+            fv = flat_v.at[flat].set(v[:, 0], mode="drop")
+            ck = fk.reshape(nb, bs_, cfg.n_kv_heads, cfg.head_dim)
+            cv = fv.reshape(nb, bs_, cfg.n_kv_heads, cfg.head_dim)
+            o = paged_attention(q, ck, cv, block_table, causal=False,
+                                q_offset=posv,
+                                kv_len=jnp.minimum(posv + 1, mb * bs_),
+                                chunk=cfg.attn_chunk)
+        else:  # chunked prefill at offset ``pos`` (batch-1 slot path)
+            assert b == 1, "paged chunked prefill is per-slot (batch 1)"
+            cl = (chunk_len if chunk_len is not None
+                  else jnp.asarray(t, jnp.int32))
+            i = jnp.arange(t)
+            wpos = pos + i
+            blk = block_table[0][jnp.clip(wpos // bs_, 0, mb - 1)]
+            flat = jnp.where((i < cl) & (blk >= 0),
+                             blk * bs_ + wpos % bs_, nb * bs_)
+            fk = flat_k.at[flat].set(k[0], mode="drop")
+            fv = flat_v.at[flat].set(v[0], mode="drop")
+            ck = fk.reshape(nb, bs_, cfg.n_kv_heads, cfg.head_dim)
+            cv = fv.reshape(nb, bs_, cfg.n_kv_heads, cfg.head_dim)
+            o = paged_attention(q, ck, cv, block_table, causal=True,
+                                q_offset=pos, kv_len=pos + cl,
+                                chunk=cfg.attn_chunk)
+        new_cache = {"k": ck, "v": cv}
     else:
         s_c = cache["k"].shape[1]
         if t == 1:  # decode step: write slot, then attend over valid slots
@@ -312,10 +384,11 @@ def _attn_block_apply(
 
 
 def _block_apply(cfg, kind, h, p, policy, phase, cache, pos, positions,
-                 positions_3d, flags, chunk_len=None):
+                 positions_3d, flags, chunk_len=None, block_table=None):
     if kind == "attn":
         return _attn_block_apply(cfg, h, p, policy, phase, cache, pos,
-                                 positions, positions_3d, flags, chunk_len)
+                                 positions, positions_3d, flags, chunk_len,
+                                 block_table)
     if kind == "rwkv6":
         y, st = rwkv6_block(h, p["rwkv"], policy, phase, cfg.n_heads,
                             cache, flags)
@@ -390,6 +463,7 @@ def _run_blocks(cfg, params, h, policy, phase, cache, positions, positions_3d,
                 chunk_len=None):
     n_per, tail = _n_periods(cfg)
     pos = cache["pos"] if cache is not None else jnp.zeros((), jnp.int32)
+    btab = cache.get("block_table") if cache is not None else None
     period_flags, tail_flags = _build_flags(cfg, policy)
     new_cache: Dict[str, Any] = {} if cache is not None else None
 
@@ -402,7 +476,8 @@ def _run_blocks(cfg, params, h, policy, phase, cache, positions, positions_3d,
                 blk_flags = fl[f"b{j}"] if fl is not None else None
                 hh, c_out = _block_apply(cfg, kind, hh, pp[f"b{j}"], policy,
                                          phase, blk_cache, pos, positions,
-                                         positions_3d, blk_flags, chunk_len)
+                                         positions_3d, blk_flags, chunk_len,
+                                         btab)
                 if cc is not None:
                     cc_new[f"b{j}"] = c_out
             return hh, cc_new
@@ -438,7 +513,7 @@ def _run_blocks(cfg, params, h, policy, phase, cache, positions, positions_3d,
                 # barrier pins the FSDP param all-gather INSIDE the loop:
                 # without it LICM hoists a whole-stack (n_layers×) gather of
                 # the loop-invariant xs out of the scan
-                pp = jax.lax.optimization_barrier(pp)
+                pp = common.opt_barrier(pp)
                 hh, _ = run_period(h_c, pp, None, fl)
                 # keep the residual carry batch-sharded (GSPMD propagation
                 # through the recurrent scan sometimes drops it)
@@ -502,7 +577,7 @@ def _run_blocks(cfg, params, h, policy, phase, cache, positions, positions_3d,
             blk_flags = tail_flags[f"t{j}"] if tail_flags is not None else None
             h, c_out = _block_apply(cfg, kind, h, params["tail"][f"t{j}"],
                                     policy, phase, blk_cache, pos, positions,
-                                    positions_3d, blk_flags, chunk_len)
+                                    positions_3d, blk_flags, chunk_len, btab)
             if cache is not None:
                 new_cache.setdefault("tail", {})[f"t{j}"] = c_out
 
@@ -611,6 +686,8 @@ def prefill_chunk(
     h, new_cache = _run_blocks(cfg, params, h, policy, "prefill", cache,
                                positions, positions_3d, chunk_len=chunk_len)
     new_cache["pos"] = pos + chunk_len
+    if "block_table" in cache:
+        new_cache["block_table"] = cache["block_table"]
     h_last = jax.lax.dynamic_slice_in_dim(h, chunk_len - 1, 1, axis=1)
     logits = _lm_logits(cfg, params, h_last)[:, 0]
     return logits, new_cache
@@ -649,5 +726,7 @@ def decode_step(
     h, new_cache = _run_blocks(cfg, params, h, policy, "decode", cache,
                                positions, positions_3d)
     new_cache["pos"] = pos + 1
+    if "block_table" in cache:
+        new_cache["block_table"] = cache["block_table"]
     logits = _lm_logits(cfg, params, h)[:, 0]
     return logits, new_cache

@@ -1,6 +1,7 @@
 from repro.serve.continuous import (ContinuousConfig, ContinuousServingEngine,
                                     Request)
 from repro.serve.engine import ServeConfig, ServingEngine
+from repro.serve.paged import BlockPool
 
 __all__ = ["ServeConfig", "ServingEngine", "ContinuousConfig",
-           "ContinuousServingEngine", "Request"]
+           "ContinuousServingEngine", "Request", "BlockPool"]

@@ -1,16 +1,24 @@
 """Continuous-batching serving engine: chunked Amber-sparse prefill
-interleaved with slot-batched dense decode.
+interleaved with slot-batched dense decode over a **paged** KV cache.
 
 Requests arrive asynchronously (:meth:`ContinuousServingEngine.submit`) and
-are scheduled over a fixed pool of KV-cache **slots**.  Each scheduler
+are scheduled over a fixed pool of decode **slots** whose KV rows live in a
+global **block pool** (:mod:`repro.serve.paged`).  Each scheduler
 iteration:
 
   1. **admit** — waiting requests whose arrival time has passed claim free
-     slots (FCFS); the slot's cache rows and recurrent state are zeroed;
+     slots FCFS, gated by a block-budget check (the pool must cover the
+     prompt); the slot's recurrent state is zeroed and its block table row
+     populated;
   2. **prefill** — the oldest admitted-but-unprefilled request advances by
      one fixed-size token chunk through the Amber-sparse projection path
-     (``model.prefill_chunk``), writing KV at its cache offset;
-  3. **decode** — all slots holding decoding requests take one dense decode
+     (``model.prefill_chunk``), scattering KV through its block table;
+  3. **ensure/preempt** — decoding slots crossing a block boundary grab a
+     fresh block; when the pool is dry the **youngest** active request is
+     preempted (blocks released, request requeued; its emitted tokens are
+     replayed through prefill on re-admission, so greedy output is
+     unchanged);
+  4. **decode** — all slots holding decoding requests take one dense decode
      step as a single padded batch (inactive slots are masked out of the
      cache update).
 
@@ -18,18 +26,20 @@ Shape buckets: prefill compiles once per chunk shape (a single
 ``chunk_size`` bucket for attention archs; a dyadic ladder of at most
 log2(chunk_size)+1 sizes for archs with recurrent blocks, whose scans
 cannot mask padded tokens), and decode compiles once for the padded
-``num_slots`` batch — arbitrary traffic never retraces.  The
-``trace_counts`` attribute counts actual retraces per phase and is asserted
-in the test suite.
+``num_slots`` batch — arbitrary traffic never retraces, and block
+allocation/preemption only rewrites the small int32 block-table array, so
+paging does not add shape buckets.  The ``trace_counts`` attribute counts
+actual retraces per phase and is asserted in the test suite.
 
 Equivalence: with greedy decoding and **per-token** sparsity modes the
 per-request output stream is token-identical to the legacy one-shot
 :class:`~repro.serve.engine.ServingEngine` — a token's N:M mask doesn't
 depend on which chunk carries it, chunked prefill attends over the cached
-prefix so logits match, and decode rows are independent of batch
-composition.  ``tile_consensus`` policies remain valid N:M serving but are
-NOT bit-identical to one-shot prefill: their masks are pooled over token
-tiles, and chunking changes tile membership (see serve/README.md).
+prefix so logits match, decode rows are independent of batch composition,
+and preemption replays the exact emitted prefix.  ``tile_consensus``
+policies remain valid N:M serving but are NOT bit-identical to one-shot
+prefill: their masks are pooled over token tiles, and chunking changes
+tile membership (see serve/README.md).
 """
 from __future__ import annotations
 
@@ -43,6 +53,7 @@ import numpy as np
 
 from repro.core.policy import DENSE, SparsityPolicy
 from repro.serve import slots as slot_ops
+from repro.serve.paged import BlockPool, init_paged_cache, max_blocks_per_slot
 
 __all__ = ["ContinuousConfig", "Request", "ContinuousServingEngine"]
 
@@ -58,6 +69,13 @@ class ContinuousConfig:
     eos_token: int = -1       # -1 → never stop early
     seed: int = 0
     max_iters: int = 100_000  # scheduler-loop safety valve
+    # --- paged KV allocation (serve/paged.py) ---
+    paged: bool = True        # auto-disabled where no full-attn KV exists
+    block_size: int = 16      # KV rows per block
+    num_blocks: Optional[int] = None
+    # None → num_slots * ceil(max_seq / block_size): same capacity as the
+    # dense slab, paged mechanics.  The memory win is sizing it LOWER and
+    # letting admission gating + preemption absorb the pressure.
 
 
 @dataclasses.dataclass
@@ -69,9 +87,12 @@ class Request:
     # --- runtime (engine-owned) ---
     state: str = WAITING
     slot: int = -1
-    filled: int = 0                    # prompt tokens prefilled so far
+    filled: int = 0                    # seq tokens prefilled so far
     cur: int = 0                       # last generated token (decode input)
     out: List[int] = dataclasses.field(default_factory=list)
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    kv_len: int = 0                    # KV rows held (host mirror of pos)
+    preempted: int = 0                 # times requeued by the block pool
     admitted_iter: int = -1
     first_token_iter: int = -1
     done_iter: int = -1
@@ -95,7 +116,7 @@ def _dyadic_sizes(length: int, cap: int) -> List[int]:
 
 
 class ContinuousServingEngine:
-    """Scheduler + slot cache + shape-bucketed jitted phases."""
+    """Scheduler + paged slot cache + shape-bucketed jitted phases."""
 
     def __init__(self, model, policy: SparsityPolicy = DENSE,
                  cfg: ContinuousConfig = ContinuousConfig()):
@@ -118,6 +139,27 @@ class ContinuousServingEngine:
             assert cfg.chunk_size <= min(mcfg.window, cfg.max_seq), (
                 "chunk_size must fit the sliding-window ring buffer")
 
+        # paged KV: only archs with full-attention KV leaves benefit;
+        # encdec (request-shaped caches), SWA rings, and pure-recurrent
+        # archs fall back to the dense per-slot slab automatically
+        spec = model.paged_kv_spec() if cfg.paged else None
+        if spec is not None and not any(jax.tree_util.tree_leaves(spec)):
+            spec = None
+        self._spec = spec
+        self.paged = spec is not None
+        self.preemptions = 0
+        if self.paged:
+            self._max_blocks = max_blocks_per_slot(cfg.max_seq,
+                                                   cfg.block_size)
+            nb = (cfg.num_blocks if cfg.num_blocks is not None
+                  else cfg.num_slots * self._max_blocks)
+            self.pool: Optional[BlockPool] = BlockPool(nb, cfg.block_size)
+            self._host_table = np.full((cfg.num_slots, self._max_blocks),
+                                       -1, np.int32)
+            self._table_dirty = True
+        else:
+            self.pool = None
+
         self.requests: List[Request] = []
         self._free_slots = list(range(cfg.num_slots))
         self._slot_req: List[Optional[Request]] = [None] * cfg.num_slots
@@ -125,23 +167,38 @@ class ContinuousServingEngine:
         self.trace_counts: Dict[str, int] = {"prefill": 0, "decode": 0}
         self.metrics: Dict[str, Any] = {}
 
-        def prefill_fn(params, cache, slot, tokens, chunk_len, extras):
-            self.trace_counts["prefill"] += 1      # runs at trace time only
-            sub = slot_ops.slice_slot(cache, slot)
-            batch = {"tokens": tokens, "chunk_len": chunk_len, **extras}
-            logits, sub = self.model.prefill_chunk(params, batch, sub,
-                                                   policy=self.policy)
-            return logits[0], slot_ops.write_slot(cache, slot, sub)
+        def make_prefill_fn(policy, count_key):
+            def prefill_fn(params, cache, slot, tokens, chunk_len, extras):
+                # runs at trace time only
+                self.trace_counts[count_key] = \
+                    self.trace_counts.get(count_key, 0) + 1
+                sub = slot_ops.slice_slot(cache, slot, self._spec)
+                batch = {"tokens": tokens, "chunk_len": chunk_len, **extras}
+                logits, sub = self.model.prefill_chunk(params, batch, sub,
+                                                       policy=policy)
+                return logits[0], slot_ops.write_slot(cache, slot, sub,
+                                                      self._spec)
+            return prefill_fn
 
         def decode_fn(params, cache, tokens, active, key):
             self.trace_counts["decode"] += 1
             logits, new_cache = self.model.decode_step(
                 params, tokens[:, None], cache, policy=DENSE)
-            new_cache = slot_ops.where_active(active, new_cache, cache)
+            new_cache = slot_ops.where_active(active, new_cache, cache,
+                                              self._spec)
             nxt = self._sample(logits, key)
             return jnp.where(active, nxt, tokens), new_cache
 
-        self._prefill_jit = jax.jit(prefill_fn)
+        self._prefill_jit = jax.jit(make_prefill_fn(policy, "prefill"))
+        # preemption replay re-ingests tokens the request already EMITTED;
+        # their KV was originally written by the dense decode step, so the
+        # replay must also run dense or sparse-prefill outputs would drift
+        # from the one-shot oracle.  Chunks never span the prompt/emitted
+        # boundary (see _next_chunk); this program only ever traces (and
+        # the "prefill_replay" key only appears) if a preemption happens
+        # under a non-dense policy.
+        self._prefill_replay_jit = jax.jit(
+            make_prefill_fn(DENSE, "prefill_replay"))
         self._decode_jit = jax.jit(decode_fn)
 
     # ------------------------------------------------------------- sampling
@@ -161,26 +218,103 @@ class ContinuousServingEngine:
         assert tokens.size > 0, "empty prompt"
         assert tokens.size + max_new_tokens <= self.cfg.max_seq, \
             "request exceeds slot capacity (max_seq)"
+        if self.paged:
+            assert (self.pool.blocks_for(tokens.size + max_new_tokens)
+                    <= self.pool.num_blocks), \
+                "request exceeds block pool capacity"
         rid = len(self.requests)
         self.requests.append(Request(rid=rid, tokens=tokens,
                                      max_new_tokens=max_new_tokens,
                                      arrival=arrival))
         return rid
 
+    def _seq(self, req: Request) -> np.ndarray:
+        """Tokens to prefill: the prompt, plus — after a preemption — the
+        tokens already emitted, replayed so decode resumes exactly where it
+        left off (greedy outputs are chunking-invariant, so the replayed
+        prefix regenerates the identical KV state)."""
+        if req.out:
+            return np.concatenate([req.tokens,
+                                   np.asarray(req.out, np.int32)])
+        return req.tokens
+
     def _admit(self, it: int) -> None:
-        for req in self.requests:
-            if req.state == WAITING and req.arrival <= it and self._free_slots:
-                slot = self._free_slots.pop(0)
-                self.cache = slot_ops.reset_slot(self.cache, slot)
-                req.slot, req.state = slot, PREFILL
-                req.admitted_iter = it
-                self._slot_req[slot] = req
+        # FCFS by arrival, not submission order: requests may be submitted
+        # with out-of-order arrival times (and preempted requests requeue
+        # with their original arrival)
+        for req in sorted(self.requests, key=lambda r: (r.arrival, r.rid)):
+            if req.state != WAITING or req.arrival > it:
+                continue
+            if not self._free_slots:
+                break
+            if self.paged:
+                need = self.pool.blocks_for(len(self._seq(req)))
+                if need > self.pool.available:
+                    # strict FCFS: the oldest waiting request admits first;
+                    # skipping ahead would starve long prompts under
+                    # sustained short-prompt traffic
+                    break
+                req.blocks = self.pool.alloc(need)
+            slot = self._free_slots.pop(0)
+            self.cache = slot_ops.reset_slot(self.cache, slot, self._spec)
+            if self.paged:
+                self._host_table[slot, :] = -1
+                self._host_table[slot, :len(req.blocks)] = req.blocks
+                self._table_dirty = True
+            req.slot, req.state = slot, PREFILL
+            req.admitted_iter = it
+            self._slot_req[slot] = req
+
+    def _preempt(self, req: Request) -> None:
+        """Requeue ``req`` (recompute-on-readmission): its blocks return to
+        the pool, its slot frees, and its emitted tokens stay on the
+        request to be replayed through prefill when it is re-admitted."""
+        self.preemptions += 1
+        req.preempted += 1
+        self.pool.release(req.blocks)
+        req.blocks = []
+        self._host_table[req.slot, :] = -1
+        self._table_dirty = True
+        self._free_slots.append(req.slot)
+        self._slot_req[req.slot] = None
+        req.slot = -1
+        req.state = WAITING
+        req.filled = 0
+        req.kv_len = 0
+
+    def _ensure_decode_blocks(self) -> None:
+        """Grab a fresh block for every decoding slot crossing a block
+        boundary; when the pool is dry, preempt the youngest active
+        request until the oldest decoders can proceed (or the needy
+        request is itself the youngest and yields)."""
+        order = sorted((r for r in self.requests if r.state == DECODE),
+                       key=lambda r: (r.admitted_iter, r.rid))
+        for r in order:
+            while r.state == DECODE:
+                need = self.pool.blocks_for(r.kv_len + 1)
+                if len(r.blocks) >= need:
+                    break
+                if self.pool.available:
+                    blk = self.pool.alloc(1)
+                    self._host_table[r.slot, len(r.blocks)] = blk[0]
+                    r.blocks.extend(blk)
+                    self._table_dirty = True
+                else:
+                    victim = max((v for v in self.requests
+                                  if v.state in (PREFILL, DECODE)),
+                                 key=lambda v: (v.admitted_iter, v.rid))
+                    self._preempt(victim)
 
     def _finish(self, req: Request, it: int, t0: float) -> None:
         req.state = DONE
         req.done_iter = it
         anchor = req.arrival_time if req.arrival_time >= 0 else t0
         req.done_time = time.perf_counter() - anchor
+        if self.paged and req.blocks:
+            self.pool.release(req.blocks)
+            req.blocks = []
+            self._host_table[req.slot, :] = -1
+            self._table_dirty = True
         self._free_slots.append(req.slot)
         self._slot_req[req.slot] = None
 
@@ -193,32 +327,50 @@ class ContinuousServingEngine:
         self.requests = []
 
     # ------------------------------------------------------------ phases
+    def _sync_table(self) -> None:
+        if self.paged and self._table_dirty:
+            self.cache["block_table"] = jnp.asarray(self._host_table)
+            self._table_dirty = False
+
     def _next_chunk(self, req: Request):
-        """(tokens (1, C), chunk_len, send_extras) for the next chunk."""
+        """(tokens (1, C), chunk_len, send_extras, is_replay) for the next
+        chunk.  Chunks never span the prompt/emitted boundary, so a replay
+        chunk (re-ingesting emitted tokens after a preemption) is entirely
+        replay and runs through the dense program."""
         c = self.cfg.chunk_size
-        rem = len(req.tokens) - req.filled
+        seq = self._seq(req)
+        rem = len(seq) - req.filled
+        if req.filled < len(req.tokens):
+            rem = min(rem, len(req.tokens) - req.filled)
+            replay = False
+        else:
+            replay = self.policy.enabled
         if self._exact_chunks:
             size = _dyadic_sizes(rem, c)[0]
-            chunk = req.tokens[req.filled:req.filled + size]
-            return chunk[None, :], size, req.filled == 0
+            chunk = seq[req.filled:req.filled + size]
+            return chunk[None, :], size, req.filled == 0, replay
         v = min(c, rem)
         chunk = np.zeros((c,), np.int32)
-        chunk[:v] = req.tokens[req.filled:req.filled + v]
-        return chunk[None, :], v, req.filled == 0
+        chunk[:v] = seq[req.filled:req.filled + v]
+        return chunk[None, :], v, req.filled == 0, replay
 
     def _prefill_one(self, params, req: Request, extras: Dict, it: int,
                      t0: float, key) -> None:
-        tokens, clen, first = self._next_chunk(req)
+        tokens, clen, first, replay = self._next_chunk(req)
         ex = extras if first else {}
-        logits, self.cache = self._prefill_jit(
+        self._sync_table()
+        fn = self._prefill_replay_jit if replay else self._prefill_jit
+        logits, self.cache = fn(
             params, self.cache, jnp.asarray(req.slot, jnp.int32),
             jnp.asarray(tokens), jnp.asarray(clen, jnp.int32), ex)
         req.filled += clen
-        if req.filled == len(req.tokens):       # prompt ingested: sample
+        req.kv_len += clen
+        if req.filled == len(self._seq(req)):   # seq ingested: sample
             tok = int(self._sample(logits, key))
             req.out.append(tok)
-            req.first_token_iter = it
-            if tok == self.cfg.eos_token or req.max_new_tokens == 1:
+            if req.first_token_iter < 0:
+                req.first_token_iter = it
+            if tok == self.cfg.eos_token or len(req.out) >= req.max_new_tokens:
                 self._finish(req, it, t0)
             else:
                 req.state, req.cur = DECODE, tok
@@ -229,10 +381,12 @@ class ContinuousServingEngine:
         act = np.zeros((self.cfg.num_slots,), bool)
         for r in decoding:
             toks[r.slot], act[r.slot] = r.cur, True
+        self._sync_table()
         nxt, self.cache = self._decode_jit(
             params, self.cache, jnp.asarray(toks), jnp.asarray(act), key)
         nxt = np.asarray(nxt)
         for r in decoding:
+            r.kv_len += 1
             tok = int(nxt[r.slot])
             r.out.append(tok)
             r.cur = tok
@@ -249,10 +403,18 @@ class ContinuousServingEngine:
         """
         extras = extras or {}
         if self.cache is None:
-            self.cache = slot_ops.init_slot_cache(
-                self.model, self.cfg.num_slots, self.cfg.max_seq)
+            if self.paged:
+                self.cache = init_paged_cache(
+                    self.model, self.cfg.num_slots, self.cfg.max_seq,
+                    self.cfg.block_size, self.pool.num_blocks, self._spec)
+            else:
+                self.cache = slot_ops.init_slot_cache(
+                    self.model, self.cfg.num_slots, self.cfg.max_seq)
         key = jax.random.PRNGKey(self.cfg.seed)
         t0 = time.perf_counter()
+        preempt0 = self.preemptions
+        if self.paged:
+            self.pool.peak_in_use = self.pool.in_use   # per-run peak
         it = 0
         while any(r.state != DONE for r in self.requests):
             assert it < self.cfg.max_iters, "scheduler stuck"
@@ -267,6 +429,8 @@ class ContinuousServingEngine:
                 req = prefilling[0]
                 self._prefill_one(params, req, extras.get(req.rid, {}),
                                   it, t0, sub)
+            if self.paged:
+                self._ensure_decode_blocks()
             decoding = [r for r in self.requests if r.state == DECODE]
             if decoding:
                 key, sub = jax.random.split(key)
@@ -280,6 +444,13 @@ class ContinuousServingEngine:
             "generated_tokens": gen,
             "tokens_per_s": gen / max(wall, 1e-9),
             "trace_counts": dict(self.trace_counts),
+            "paged": ({
+                "enabled": True,
+                "block_size": self.pool.block_size,
+                "num_blocks": self.pool.num_blocks,
+                "peak_blocks_in_use": self.pool.peak_in_use,
+                "preemptions": self.preemptions - preempt0,
+            } if self.paged else {"enabled": False}),
             "requests": [{
                 "rid": r.rid,
                 "prompt_len": int(len(r.tokens)),
@@ -290,6 +461,7 @@ class ContinuousServingEngine:
                 "latency_iters": r.done_iter - r.arrival,
                 "latency_s": r.done_time,
                 "n_out": len(r.out),
+                "preemptions": r.preempted,
             } for r in self.requests],
         }
         return {

@@ -1,0 +1,129 @@
+"""Paged KV-cache allocation: a global block pool + per-slot block tables.
+
+The fixed ``max_seq``-per-slot KV slab of the continuous engine reserves
+``num_slots * max_seq`` rows per layer even when traffic is mostly short
+prompts — memory, not compute, then caps concurrency.  Paged allocation
+replaces the slab with a **global pool** of fixed-size KV blocks shared by
+every slot:
+
+  * each attention layer's cache leaf becomes a pooled
+    ``(num_blocks, block_size, n_kv_heads, head_dim)`` array;
+  * each slot holds a **block table** — a ``(max_blocks_per_slot,)`` int32
+    row mapping logical block index (``position // block_size``) to a
+    physical block id, ``-1`` = unallocated;
+  * logical KV row ``p`` of a slot lives at physical flat row
+    ``table[p // block_size] * block_size + p % block_size``.
+
+The :class:`BlockPool` free list is **host-side** (allocation decisions
+are scheduler decisions, not traced computation); only the small int32
+block-table array crosses to the device, so admission/release never
+retraces the jitted phases.  Recurrent state leaves (rwkv6 / rglru) are
+position-independent and stay per-slot; sliding-window rings are already
+bounded by ``window`` and are not paged (see ``transformer.paged_kv_spec``).
+
+Sizing the pool below ``num_slots * ceil(max_seq / block_size)`` is the
+point: the engine admits by block budget instead of free slots alone, and
+preempts the youngest request (recompute on re-admission) when the pool
+runs dry mid-decode — see ``serve/README.md`` for the policy.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.slots import slot_axis
+
+__all__ = ["BlockPool", "init_paged_cache", "max_blocks_per_slot"]
+
+
+def max_blocks_per_slot(max_seq: int, block_size: int) -> int:
+    """Width of a slot's block table: logical blocks covering ``max_seq``."""
+    return -(-max_seq // block_size)
+
+
+class BlockPool:
+    """Host-side free-list allocator over ``num_blocks`` fixed-size blocks.
+
+    Invariants (asserted, and exercised by ``tests/test_paged_kv.py``):
+    a block id is never handed out twice while allocated, and never
+    released twice.  Reuse is FIFO so fragmentation patterns (interleaved
+    alloc/free) sweep the whole pool rather than hammering one block.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        assert num_blocks > 0 and block_size > 0
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(num_blocks))
+        self._owned: set = set()
+        self.peak_in_use = 0
+        self.total_allocs = 0
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to hold ``n_tokens`` KV rows."""
+        return -(-n_tokens // self.block_size)
+
+    def alloc(self, n: int) -> List[int]:
+        """Hand out ``n`` block ids; raises if the pool cannot cover it
+        (callers check :attr:`available` and preempt first)."""
+        if n > len(self._free):
+            raise RuntimeError(
+                f"block pool exhausted: want {n}, have {len(self._free)}")
+        ids = [self._free.pop(0) for _ in range(n)]
+        for i in ids:
+            assert i not in self._owned, f"double allocation of block {i}"
+            self._owned.add(i)
+        self.total_allocs += n
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return ids
+
+    def release(self, ids: List[int]) -> None:
+        for i in ids:
+            assert i in self._owned, f"release of unallocated block {i}"
+            self._owned.remove(i)
+            self._free.append(i)
+
+
+def init_paged_cache(model, num_slots: int, max_seq: int, block_size: int,
+                     num_blocks: int, spec: Dict[str, Any]) -> Dict[str, Any]:
+    """Slot cache with paged attention leaves.
+
+    ``spec`` is the bool pytree from ``model.paged_kv_spec()``: leaves
+    marked True swap their ``(..., num_slots, max_seq, ...)`` axes for
+    pooled ``(..., num_blocks, block_size, ...)``; everything else keeps
+    the slot axis.  Adds the per-slot ``pos`` vector and the ``-1``-filled
+    ``block_table``.
+    """
+    # shapes only — materializing the dense slab just to discard its paged
+    # leaves would transiently cost dense + pool memory, exactly the
+    # footprint paging exists to avoid
+    shapes = jax.eval_shape(lambda: model.init_cache(num_slots, max_seq))
+    mb = max_blocks_per_slot(max_seq, block_size)
+    out: Dict[str, Any] = {
+        "pos": jnp.zeros((num_slots,), jnp.int32),
+        "block_table": jnp.full((num_slots, mb), -1, jnp.int32),
+    }
+    for key, sub in shapes.items():
+        if key == "pos":
+            continue
+        ax = slot_axis(key)
+
+        def pool_leaf(a, paged, ax=ax):
+            if paged:
+                shape = (a.shape[:ax] + (num_blocks, block_size)
+                         + a.shape[ax + 2:])
+                return jnp.zeros(shape, a.dtype)
+            return jnp.zeros(a.shape, a.dtype)
+
+        out[key] = jax.tree_util.tree_map(pool_leaf, sub, spec[key])
+    return out

@@ -1,0 +1,57 @@
+"""The bench-smoke CI gate (benchmarks/check_bench.py) must catch the two
+silent failure modes: a kernel row dropping out of the trajectory and a
+row carrying a non-finite timing."""
+import json
+
+from benchmarks.check_bench import REQUIRED_KERNEL_ROWS, check_trajectory
+
+
+def _run(rows):
+    return [{"utc": "2026-01-01T00:00:00", "tables": ["kernels"],
+             "rows": rows}]
+
+
+def _healthy_rows():
+    return [{"name": p + "256x2048", "us_per_call": 12.5, "derived": "x"}
+            for p in REQUIRED_KERNEL_ROWS]
+
+
+def test_healthy_trajectory_passes(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps(_run(_healthy_rows())))
+    assert check_trajectory(str(p)) == []
+
+
+def test_missing_row_fails(tmp_path):
+    rows = [r for r in _healthy_rows() if "nm_spmm" not in r["name"]]
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps(_run(rows)))
+    errs = check_trajectory(str(p))
+    assert errs and "nm_spmm" in errs[0]
+
+
+def test_nonfinite_row_fails(tmp_path):
+    for bad in (float("nan"), float("inf"), 0.0, None):
+        rows = _healthy_rows()
+        rows[0]["us_per_call"] = bad
+        p = tmp_path / "b.json"
+        p.write_text(json.dumps(_run(rows)))   # NaN/Infinity round-trip
+        errs = check_trajectory(str(p))
+        assert errs, f"accepted us_per_call={bad!r}"
+
+
+def test_only_latest_run_is_gated(tmp_path):
+    """Older broken runs don't fail the gate — the trajectory is history,
+    the gate guards the current commit."""
+    old = _run([])[0]
+    new = _run(_healthy_rows())[0]
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps([old, new]))
+    assert check_trajectory(str(p)) == []
+
+
+def test_unreadable_or_empty_fails(tmp_path):
+    p = tmp_path / "missing.json"
+    assert check_trajectory(str(p))
+    p.write_text("[]")
+    assert check_trajectory(str(p))

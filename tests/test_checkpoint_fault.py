@@ -11,6 +11,7 @@ from repro.checkpoint import CheckpointManager, load_checkpoint, \
     save_checkpoint
 from repro.configs.base import get_smoke_config
 from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_mesh_auto
 from repro.models import build_model
 from repro.train.optimizer import OptConfig
 from repro.train.trainer import Trainer, TrainerConfig
@@ -75,8 +76,7 @@ def test_elastic_restore_different_sharding(tmp_path, rng):
     tree = {"w": jax.random.normal(rng, (8, 8))}
     p = str(tmp_path / "c.npz")
     save_checkpoint(p, tree)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_auto((1, 1), ("data", "model"))
     from jax.sharding import NamedSharding, PartitionSpec as P
     sh = {"w": NamedSharding(mesh, P("data", "model"))}
     out = load_checkpoint(p, tree, shardings=sh)

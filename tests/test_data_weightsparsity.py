@@ -51,11 +51,21 @@ def test_weight_sparsity_valid_nm(n, m, rng):
 
 def test_wanda_beats_magnitude_under_skewed_acts(rng):
     """Wanda's activation-aware score must beat plain magnitude when the
-    calibration activations are strongly channel-skewed."""
+    calibration activations are strongly channel-skewed.
+
+    The skew must vary WITHIN each M-group of adjacent input channels —
+    N:M selection happens inside groups, so a smooth ramp (neighbouring
+    channels nearly equal) collapses Wanda to magnitude up to ties and the
+    comparison becomes a coin flip.  A fixed permutation of the ramp puts
+    large and small norms in the same group, which is the regime Wanda's
+    score is for.
+    """
     k1, k2 = jax.random.split(rng)
     w = jax.random.normal(k1, (64, 32))
     x = jax.random.normal(k2, (128, 64))
-    x = x * (jnp.arange(64) + 1)[None, :] ** 1.5  # skewed channels
+    scales = (jnp.arange(64) + 1.0) ** 1.5        # skewed channels
+    perm = jax.random.permutation(jax.random.PRNGKey(7), 64)
+    x = x * scales[perm][None, :]                 # skew mixed across groups
     act_norm = jnp.linalg.norm(x, axis=0)
     y_ref = x @ w
     e_mag = jnp.linalg.norm(x @ weight_sparsity.magnitude_nm(w, 2, 4) - y_ref)

@@ -9,6 +9,7 @@ import pytest
 
 from repro.configs.base import get_smoke_config
 from repro.core.policy import DENSE
+from repro.launch.mesh import make_mesh_auto
 from repro.models import build_model
 
 
@@ -41,8 +42,7 @@ def test_moe_capacity_matches_ragged_when_ample(rng):
     y_local = model.forward(params, batch, policy=DENSE, phase="prefill")
 
     # route through the shard_map body on a 1×1 mesh (capacity path)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_auto((1, 1), ("data", "model"))
     with mesh:
         y_sm = model.forward(params, batch, policy=DENSE, phase="prefill")
     # capacity = 1.25× mean load; random routing at B*T=32 tokens over 4

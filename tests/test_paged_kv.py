@@ -1,0 +1,215 @@
+"""Paged KV-cache allocation (ISSUE 3).
+
+The contract: sizing the block pool well below ``num_slots * max_seq``
+must change only WHEN requests run, never WHAT they emit — greedy outputs
+stay token-identical to the one-shot engine through block-budget
+admission, block-table scatter/gather, and pool-exhaustion preemption —
+and paging must not add shape buckets (one compile per phase).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.core.policy import DENSE, paper_policy
+from repro.core.pruner import precompute_scales
+from repro.models import build_model
+from repro.serve import (ContinuousConfig, ContinuousServingEngine,
+                         ServeConfig, ServingEngine)
+from repro.serve.paged import BlockPool
+
+MAX_SEQ = 64
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = dataclasses.replace(get_smoke_config("llama31_8b"),
+                              dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, lens, seed0=10):
+    return [np.asarray(jax.random.randint(jax.random.PRNGKey(seed0 + i),
+                                          (l,), 0, cfg.vocab_size))
+            for i, l in enumerate(lens)]
+
+
+def _oracle(model, params, policy, prompt, max_new):
+    eng = ServingEngine(model, policy, ServeConfig(max_seq=MAX_SEQ))
+    out = eng.generate(params, {"tokens": jnp.asarray(prompt)[None, :]},
+                       max_new_tokens=max_new)
+    return np.asarray(out["tokens"])[0].tolist()
+
+
+def _serve(model, params, policy, prompts, arrivals, max_new, **cfg_kw):
+    eng = ContinuousServingEngine(model, policy, ContinuousConfig(
+        max_seq=MAX_SEQ, **cfg_kw))
+    for p, a, mn in zip(prompts, arrivals, max_new):
+        eng.submit(p, max_new_tokens=mn, arrival=a)
+    return eng, eng.run(params)
+
+
+# ------------------------------------------------------------- BlockPool
+
+def test_block_pool_never_double_allocates():
+    pool = BlockPool(num_blocks=8, block_size=4)
+    a = pool.alloc(5)
+    b = pool.alloc(3)
+    assert len(set(a + b)) == 8, "same block handed out twice"
+    assert pool.available == 0
+    with pytest.raises(RuntimeError):
+        pool.alloc(1)
+    pool.release(b)
+    c = pool.alloc(2)
+    assert not set(c) & set(a), "released-and-reissued id collided with live"
+    with pytest.raises(AssertionError):
+        pool.release(b[:1] + b[:1])        # double free
+    assert pool.peak_in_use == 8
+
+
+def test_block_pool_fragmentation_roundtrip():
+    """Interleaved alloc/free (fragmenting pattern) round-trips: every id
+    returns exactly once and the pool refills completely."""
+    pool = BlockPool(num_blocks=16, block_size=2)
+    held = {}
+    rng = np.random.default_rng(0)
+    for step in range(200):
+        if held and (pool.available == 0 or rng.random() < 0.45):
+            key = rng.choice(list(held))
+            pool.release(held.pop(key))
+        else:
+            n = int(rng.integers(1, min(4, pool.available) + 1))
+            held[step] = pool.alloc(n)
+        live = [i for ids in held.values() for i in ids]
+        assert len(live) == len(set(live)) == pool.in_use
+    for ids in held.values():
+        pool.release(ids)
+    assert pool.available == 16
+    assert sorted(pool.alloc(16)) == list(range(16))
+
+
+def test_blocks_for():
+    pool = BlockPool(num_blocks=4, block_size=8)
+    assert pool.blocks_for(1) == 1
+    assert pool.blocks_for(8) == 1
+    assert pool.blocks_for(9) == 2
+
+
+# --------------------------------------------- engine under a 50% pool
+
+def test_half_pool_token_identical_one_trace(tiny):
+    """Acceptance: pool at 50% of num_slots*max_seq, staggered greedy
+    outputs token-identical to the one-shot engine, one compile per shape
+    bucket."""
+    cfg, model, params = tiny
+    slots, bs = 3, 8
+    half_pool = (slots * MAX_SEQ) // (2 * bs)          # 50% of the slab
+    lens, arrivals, max_new = [5, 21, 13, 30, 9], [0, 0, 2, 4, 7], \
+        [8, 10, 6, 8, 12]
+    prompts = _prompts(cfg, lens)
+    eng, res = _serve(model, params, DENSE, prompts, arrivals, max_new,
+                      num_slots=slots, chunk_size=16,
+                      block_size=bs, num_blocks=half_pool)
+    assert eng.paged and eng.pool.num_blocks == half_pool
+    for i, p in enumerate(prompts):
+        assert res["outputs"][i] == _oracle(model, params, DENSE, p,
+                                            max_new[i]), f"request {i}"
+    assert eng.trace_counts == {"prefill": 1, "decode": 1}, eng.trace_counts
+    pg = res["metrics"]["paged"]
+    assert pg["enabled"] and pg["peak_blocks_in_use"] <= half_pool
+    # the pool must have been genuinely shared/recycled, not just sliced
+    assert eng.pool.total_allocs > half_pool
+    assert eng.pool.in_use == 0                         # all released
+
+
+def test_pool_exhaustion_preempts_and_preserves_tokens(tiny):
+    """Two long-decoding requests over a pool that cannot hold both:
+    the youngest is preempted (blocks released, requeued) and every
+    output stream still matches the one-shot engine."""
+    cfg, model, params = tiny
+    bs = 4
+    # each request peaks at ceil((10+24)/4) = 9 blocks; pool of 12 admits
+    # both (3+3 at admission) but cannot carry both through decode
+    lens, arrivals, max_new = [10, 10], [0, 0], [24, 24]
+    prompts = _prompts(cfg, lens, seed0=40)
+    eng, res = _serve(model, params, DENSE, prompts, arrivals, max_new,
+                      num_slots=2, chunk_size=8, block_size=bs,
+                      num_blocks=12)
+    pg = res["metrics"]["paged"]
+    assert pg["preemptions"] > 0, "scenario failed to exhaust the pool"
+    for i, p in enumerate(prompts):
+        assert res["outputs"][i] == _oracle(model, params, DENSE, p,
+                                            max_new[i]), f"request {i}"
+    reqs = {r["rid"]: r for r in res["metrics"]["requests"]}
+    assert reqs[1]["preemptions"] > 0          # youngest was the victim
+    assert reqs[0]["preemptions"] == 0         # oldest never requeued
+    assert eng.pool.in_use == 0
+
+
+def test_preemption_sparse_prefill_replays_dense(tiny):
+    """Preemption under an Amber-sparse prefill policy: emitted tokens are
+    replayed through the DENSE program (their KV was first written by the
+    dense decode step), so outputs still match the one-shot engine."""
+    cfg, model, params = tiny
+    policy = paper_policy(2, 4, cfg.qgate_skip_layers)
+    params = precompute_scales(params, policy)
+    lens, arrivals, max_new = [10, 10], [0, 0], [24, 24]
+    prompts = _prompts(cfg, lens, seed0=60)
+    eng, res = _serve(model, params, policy, prompts, arrivals, max_new,
+                      num_slots=2, chunk_size=8, block_size=4,
+                      num_blocks=12)
+    assert res["metrics"]["paged"]["preemptions"] > 0
+    for i, p in enumerate(prompts):
+        assert res["outputs"][i] == _oracle(model, params, policy, p,
+                                            max_new[i]), f"request {i}"
+    # replay is its own shape bucket, compiled once
+    assert eng.trace_counts["prefill"] == 1
+    assert eng.trace_counts.get("prefill_replay", 0) == 1
+    assert eng.trace_counts["decode"] == 1
+
+
+def test_admission_gated_by_block_budget(tiny):
+    """A pool that fits one request at a time serializes admission instead
+    of preempting: the second request waits for blocks, outputs and the
+    free list stay intact."""
+    cfg, model, params = tiny
+    lens, arrivals, max_new = [16, 16], [0, 0], [8, 8]
+    prompts = _prompts(cfg, lens, seed0=80)
+    eng, res = _serve(model, params, DENSE, prompts, arrivals, max_new,
+                      num_slots=2, chunk_size=8, block_size=8,
+                      num_blocks=3)   # ceil(24/8)=3 → one request at a time
+    for i, p in enumerate(prompts):
+        assert res["outputs"][i] == _oracle(model, params, DENSE, p,
+                                            max_new[i]), f"request {i}"
+    reqs = {r["rid"]: r for r in res["metrics"]["requests"]}
+    assert reqs[1]["admitted_iter"] >= reqs[0]["done_iter"]
+    assert res["metrics"]["paged"]["preemptions"] == 0
+
+
+def test_paged_auto_disabled_where_pointless():
+    """Archs with no full-attention KV (pure recurrent) fall back to the
+    dense slab automatically and still serve correctly."""
+    cfg = dataclasses.replace(get_smoke_config("rwkv6_7b"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ContinuousServingEngine(model, DENSE, ContinuousConfig(
+        max_seq=MAX_SEQ, num_slots=2, chunk_size=8))
+    assert not eng.paged and eng.pool is None
+    eng.submit(_prompts(cfg, [9], seed0=90)[0], max_new_tokens=4)
+    res = eng.run(params)
+    assert res["metrics"]["paged"] == {"enabled": False}
+    assert len(res["outputs"][0]) == 4
+
+
+def test_submit_rejects_over_pool_capacity(tiny):
+    cfg, model, params = tiny
+    eng = ContinuousServingEngine(model, DENSE, ContinuousConfig(
+        max_seq=MAX_SEQ, num_slots=2, chunk_size=8, block_size=8,
+        num_blocks=2))                     # 16 tokens of pool capacity
+    with pytest.raises(AssertionError):
+        eng.submit(np.arange(10, dtype=np.int32), max_new_tokens=10)
