@@ -23,6 +23,7 @@ REQUIRED_KERNEL_ROWS = (
     "kernel/nm_spmm/",
     "kernel/w8a8/",
     "kernel/osparse_matmul/",
+    "kernel/paged_attention/",
 )
 
 

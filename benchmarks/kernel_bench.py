@@ -12,12 +12,18 @@ derived column carries the analytic TPU roofline estimate per call:
                      chain's smoothed/masked/quantized copies
                      (~3 writes + 3 extra reads of X)
   w8a8_matmul      — compute-bound:   2·T·D·N_out / (2×197) TFLOP/s
+  paged_attention  — bandwidth-bound: the gather oracle writes + re-reads
+                     the (B, max_blocks·block_size) logical KV view per
+                     call on top of the attention's own streaming; the
+                     in-kernel block-table walk streams only the allocated
+                     ≤ceil(kv_len/bs) blocks once (decode: O(pos) rows)
 vs the dense bf16 GEMM baseline 2·T·D·N_out / 197 TFLOP/s.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import csv_row, timeit_us
 from repro.kernels import ops, ref
@@ -95,6 +101,47 @@ def run() -> list[str]:
             f"kernel/osparse_matmul/{t}x{d}x{no}", us,
             f"tpu_est_s={est:.3e};unfused_est_s={est_chain:.3e};"
             f"speedup_vs_bf16={dense_s/est:.2f}x"))
+
+    # paged attention (shape-independent of the GEMM sweep above):
+    # in-kernel block-table walk (interpret mode) vs the jnp gather oracle
+    # that materializes a (B, mb·bs, Hkv, hd) logical view in HBM on every
+    # chunked-prefill / decode call
+    from repro.models.attention import paged_attention
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(1), 3)
+    nb_, bs_, mb_ = 24, 16, 16
+    bp, tq, hq, hkv, hd = 2, 16, 4, 2, 64
+    kpool = jax.random.normal(kk, (nb_, bs_, hkv, hd), dtype=jnp.bfloat16)
+    vpool = jax.random.normal(kv, (nb_, bs_, hkv, hd), dtype=jnp.bfloat16)
+    tab = np.full((bp, mb_), -1, np.int32)
+    tab[0, :8] = np.arange(1, 9)           # 128 valid rows
+    tab[1, :6] = np.arange(9, 15)          # 96 valid rows
+    tabj = jnp.asarray(tab)
+    qp = jax.random.normal(kq, (bp, tq, hq, hd), dtype=jnp.bfloat16)
+    kvl = jnp.asarray([8 * bs_, 6 * bs_], jnp.int32)
+    kw = dict(causal=True, q_offset=jnp.asarray(4 * bs_, jnp.int32),
+              kv_len=kvl, chunk=128)
+    # jit BOTH sides so the row compares lowered programs, not the
+    # oracle's eager per-op Python dispatch against a cached pallas_call
+    run_k = jax.jit(lambda q_, kp_, vp_, t_: paged_attention(
+        q_, kp_, vp_, t_, use_kernel=True, **kw))
+    run_o = jax.jit(lambda q_, kp_, vp_, t_: paged_attention(
+        q_, kp_, vp_, t_, use_kernel=False, **kw))
+    us_k = timeit_us(lambda: run_k(qp, kpool, vpool, tabj), iters=3)
+    us_o = timeit_us(lambda: run_o(qp, kpool, vpool, tabj), iters=3)
+    row_head = hd * 2                             # one head's KV row, bf16
+    walked = int(jnp.sum(jnp.ceil(kvl / bs_))) * bs_
+    view_rows = bp * mb_ * bs_
+    # oracle: full-Hkv logical view written then re-read (2 passes), K and V
+    est_o = (2 * 2 * view_rows * hkv * row_head) / HBM
+    # kernel: each allocated block streams once per (query head, q-tile) as
+    # a single-KV-head slice — the cost model in kernels/__init__.py
+    n_qt = tq // min(128, tq)
+    est_k = (2 * hq * n_qt * walked * row_head) / HBM
+    rows.append(csv_row(
+        f"kernel/paged_attention/{bp}x{tq}x{mb_ * bs_}", us_k,
+        f"oracle_us={us_o:.1f};tpu_est_s={est_k:.3e};"
+        f"gather_est_s={est_o:.3e};"
+        f"hbm_traffic_ratio={est_o / est_k:.2f}x"))
     return rows
 
 

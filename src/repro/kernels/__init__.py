@@ -12,6 +12,15 @@ VMEM/registers, never HBM):
                      dequant
   w8a8_matmul      — plain int8×int8→int32 GEMM with SmoothQuant dequant
   flash_attention  — causal online-softmax attention, VMEM score tiles
+                     (full and sliding-window self-attention; off-band KV
+                     blocks are skipped at block granularity)
+  paged_attention  — flash attention over the paged KV pool: the KV grid
+                     axis walks the per-row block table (scalar prefetch,
+                     ``pltpu.PrefetchScalarGridSpec``), streaming each
+                     physical block through VMEM and skipping ``-1`` /
+                     ≥ ``kv_len`` / off-band blocks before their matmuls
+                     issue — chunked prefill at cache offsets and
+                     vector-position decode share one kernel
 
 Dispatch order for model projections (``layers.linear.sparse_linear``):
 
@@ -40,10 +49,34 @@ streaming, which is identical for the fused and unfused forms):
                     residency is per k-block (bt·bk + bk·bo), so reduction
                     depth D is unbounded (16k+ tiles fine).
 
+Paged-attention HBM cost model (per serving call over a pool of
+``num_blocks`` blocks of ``bs`` rows, table width ``mb``, per-row valid
+length ``kv_len``; row bytes r = Hkv·hd·s):
+
+  gather oracle     materializes the (B, mb·bs, Hkv, hd) logical view in
+                    HBM — B·mb·bs·r written then re-read by the attention
+                    scan (2 extra logical-view passes per layer per call),
+                    and the traffic is O(mb·bs) regardless of how little
+                    of the table is allocated.  For decode (T = 1) this is
+                    the dominant term of the whole step.
+  paged_attention   0 extra passes — each allocated block streams HBM→VMEM
+                    exactly once per (head, q-tile); traffic is
+                    O(ceil(kv_len/bs)·bs) ≈ O(kv_len) per row, so decode
+                    attention reads O(pos) rows instead of O(mb·bs), and
+                    skipped blocks (unallocated tail, causal future,
+                    off-window) never issue their DMA-consuming matmuls.
+
+Dispatch for paged attention (``models/attention.paged_attention``) runs
+the same ladder as the projections: ``SparsityPolicy.use_pallas_kernels``
+→ ``REPRO_PALLAS_INTERPRET`` (interpret vs Mosaic) → the jnp
+gather-then-attend oracle (always used for windowed paged shapes and
+non-tile-divisible query counts).
+
 ``ops``  — jit'd wrappers (batched, padded, interpret-mode switch)
 ``ref``  — pure-jnp oracles used by the allclose test sweeps
 """
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.ops import (
     nm_prune,
     nm_prune_matmul,
@@ -59,4 +92,5 @@ __all__ = [
     "osparse_matmul",
     "w8a8_matmul",
     "flash_attention_pallas",
+    "paged_attention_pallas",
 ]

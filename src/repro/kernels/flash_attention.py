@@ -9,11 +9,14 @@ score tile in VMEM/registers: HBM traffic drops from O(T·S) to
 O(T·S/bt · d) operand reads — i.e. the memory term collapses to operand
 streaming (napkin math in §Perf A, iteration A4).
 
-Layout: q (B, H, T, d), k/v (B, H, S, d); grid (B·H, T/bt, S/bk) with the
-KV-block axis innermost; scratch (m, l, acc) carries the running softmax
-state across KV blocks; finalization divides on the last block.  Causal
-masking by absolute block offsets.  MXU alignment: bt, bk multiples of
-128 on real hardware (any value in interpret mode).
+Layout: q (B, Hq, T, d), k/v (B, Hkv, S, d) with Hq a multiple of Hkv —
+GQA is resolved in the index map (query head h streams KV head
+h // (Hq/Hkv)), so grouped KV is never head-repeated in HBM.  Grid
+(B, Hq, T/bt, S/bk) with the KV-block axis innermost; scratch (m, l, acc)
+carries the running softmax state across KV blocks; finalization divides
+on the last block.  Causal masking by absolute block offsets.  MXU
+alignment: bt, bk multiples of 128 on real hardware (any value in
+interpret mode).
 """
 from __future__ import annotations
 
@@ -29,17 +32,52 @@ __all__ = ["flash_attention_pallas"]
 _NEG = -1e30
 
 
+# The online-softmax scratch state machine, shared with the paged-attention
+# kernel (kernels/paged_attention.py): this is the numerically delicate part
+# (fully-masked-row guard, l clamp), so it lives in exactly one place while
+# each kernel keeps its own masking and block-walk logic.
+
+def softmax_init(m_ref, l_ref, acc_ref) -> None:
+    m_ref[...] = jnp.full_like(m_ref, _NEG)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def softmax_update(s, v, m_ref, l_ref, acc_ref) -> None:
+    """Fold one KV block into the running (m, l, acc) scratch.
+
+    ``s`` is the already-masked (bq, bk) score tile — invalid lanes hold
+    ``_NEG``, which the ``s > _NEG / 2`` guard turns into exactly-zero
+    probabilities (a fully-masked row would otherwise yield
+    exp(_NEG − _NEG) = 1 per lane).  ``v`` is the (bk, d) value tile.
+    """
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(s > _NEG / 2, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+
+def softmax_finalize(l_ref, acc_ref, dtype):
+    """Normalized (bq, d) output tile; rows that never saw a valid lane
+    (l = 0) come out as zeros instead of dividing by zero."""
+    return (acc_ref[...] /
+            jnp.maximum(l_ref[...], 1e-20)[:, None]).astype(dtype)
+
+
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             n_kv: int, bq: int, bk: int, causal: bool, scale: float,
             window: int):
-    qi = pl.program_id(1)
-    ki = pl.program_id(2)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
 
     @pl.when(ki == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, _NEG)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        softmax_init(m_ref, l_ref, acc_ref)
 
     # block-level band check: a KV block entirely outside
     # (q_lo − window, q_hi] contributes nothing — skip its matmuls (on TPU
@@ -54,9 +92,9 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(visible)
     def _accumulate():
-        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
-        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
-        v = v_ref[0].astype(jnp.float32)
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
 
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
         q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
@@ -66,28 +104,19 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         if window > 0:
             s = jnp.where(k_pos > q_pos - window, s, _NEG)
 
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, s.max(axis=-1))
-        p = jnp.exp(s - m_new[:, None])
-        p = jnp.where(s > _NEG / 2, p, 0.0)
-        alpha = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
-        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
-            p, v, preferred_element_type=jnp.float32)
-        m_ref[...] = m_new
+        softmax_update(s, v, m_ref, l_ref, acc_ref)
 
     @pl.when(ki == n_kv - 1)
     def _finalize():
-        o_ref[0] = (acc_ref[...] /
-                    jnp.maximum(l_ref[...], 1e-20)[:, None]).astype(o_ref.dtype)
+        o_ref[0, 0] = softmax_finalize(l_ref, acc_ref, o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k", "interpret"))
 def flash_attention_pallas(
-    q: jax.Array,                 # (B, H, T, d)
-    k: jax.Array,                 # (B, H, S, d)
-    v: jax.Array,                 # (B, H, S, d)
+    q: jax.Array,                 # (B, Hq, T, d)
+    k: jax.Array,                 # (B, Hkv, S, d); Hq % Hkv == 0
+    v: jax.Array,                 # (B, Hkv, S, d)
     causal: bool = True,
     window: int = 0,              # >0 → sliding-window (SWA/local) band
     block_q: int = 128,
@@ -95,33 +124,35 @@ def flash_attention_pallas(
     interpret: bool = True,       # CPU container default
 ) -> jax.Array:
     b, h, t, d = q.shape
-    s = k.shape[2]
+    hkv, s = k.shape[1], k.shape[2]
+    g = h // hkv
     bq = min(block_q, t)
     bk = min(block_k, s)
-    assert t % bq == 0 and s % bk == 0, (t, s, bq, bk)
+    assert h % hkv == 0 and t % bq == 0 and s % bk == 0, (h, hkv, t, s)
     n_kv = s // bk
     scale = d**-0.5
 
-    qf = q.reshape(b * h, t, d)
-    kf = k.reshape(b * h, s, d)
-    vf = v.reshape(b * h, s, d)
-
+    # query head hi streams KV head hi // g straight from the grouped
+    # layout — no head-repeated KV copy ever lands in HBM
     out = pl.pallas_call(
         functools.partial(_kernel, n_kv=n_kv, bq=bq, bk=bk, causal=causal,
                           scale=scale, window=window),
-        grid=(b * h, t // bq, n_kv),
+        grid=(b, h, t // bq, n_kv),
         in_specs=[
-            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
-            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
-            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki: (bi, hi // g, ki, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b * h, t, d), q.dtype),
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, d), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq, d), jnp.float32),
         ],
         interpret=interpret,
-    )(qf, kf, vf)
-    return out.reshape(b, h, t, d)
+    )(q, k, v)
+    return out

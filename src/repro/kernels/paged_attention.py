@@ -1,0 +1,191 @@
+"""Pallas TPU kernel: paged flash attention — the KV grid axis walks the
+per-row block table in-kernel.
+
+Why it exists here: PR 3's paged KV cache made allocation block-granular,
+but the serving engine's attention still gathered a dense
+``(B, max_blocks * block_size, Hkv, hd)`` logical view into HBM on every
+chunked-prefill and decode call (``models/attention.gather_kv_blocks``) —
+a full write + re-read of the logical cache view per call, which the
+roofline pass shows is the dominant HBM term of paged serving.  This
+kernel deletes that view: the innermost grid axis iterates **logical**
+block indices, each step resolves ``block_table[b, ki]`` from a
+scalar-prefetch argument (``pltpu.PrefetchScalarGridSpec``) and streams
+that *physical* block of the shared pool straight through VMEM.  Blocks
+that are unallocated (``-1``) or entirely outside the row's valid
+``kv_len`` (and, with causal/window masking, outside the query band) are
+skipped before their matmuls issue — decode attention is O(pos) per row,
+not O(max_blocks * block_size).
+
+Layout: q ``(B, Tq, Hq, hd)``; pools ``(num_blocks, block_size, Hkv, hd)``
+shared by every row (GQA is resolved in the index map: query head ``h``
+reads KV head ``h // (Hq // Hkv)`` — the pool is never head-repeated in
+HBM).  Grid ``(B, Hq, Tq/bq, max_blocks)`` with the block axis innermost;
+scratch (m, l, acc) carries the online-softmax state across blocks;
+finalization divides on the last block.  Masking is by **absolute**
+positions: query row r sits at ``q_offset[b] + qi*bq + r`` and block
+``ki`` covers positions ``[ki*bs, (ki+1)*bs)``, so chunked prefill at a
+cache offset (scalar ``q_offset`` broadcast per row) and vector-position
+decode (per-row ``q_offset``) lower to the same kernel.
+
+MXU alignment: bq and block_size should be multiples of the hardware tile
+on real TPUs (any value in interpret mode — decode runs bq=1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention import (_NEG, softmax_finalize,
+                                           softmax_init, softmax_update)
+
+__all__ = ["paged_attention_pallas", "paged_kernel_covers"]
+
+
+def paged_kernel_covers(t: int) -> bool:
+    """Can the kernel serve a ``t``-query call?  The single source of
+    truth for the q-tile divisibility rule — the dispatch layer
+    (``models/attention.paged_attention``) falls back to the gather oracle
+    when this is False, and the serving engine rejects prefill chunk
+    buckets that would silently do so while claiming the kernel ran."""
+    return t % min(128, t) == 0
+
+
+def _block_visible(tab_ref, qoff_ref, kvlen_ref, bi, qi, ki, *,
+                   bq: int, bs: int, causal: bool, window: int):
+    """(physical block id, contributes-anything?) for one grid step.
+
+    The SINGLE definition of the block-level walk: an unallocated (-1)
+    table entry, a block entirely past the row's kv_len, or a block
+    entirely outside the causal/window band of this q tile contributes
+    nothing.  Both the kernel body (to skip the matmuls — on TPU Mosaic
+    this prunes the MXU work; decode touches O(pos) rows) and the
+    BlockSpec index map (to skip the DMA) consume this predicate; if they
+    ever disagreed, the body would accumulate a block the pipeline never
+    fetched.
+    """
+    pb = tab_ref[bi, ki]
+    k_lo = ki * bs
+    vis = (pb >= 0) & (k_lo < kvlen_ref[bi])
+    q_lo = qoff_ref[bi] + qi * bq
+    if causal:
+        vis = vis & (k_lo <= q_lo + bq - 1)
+    if window > 0:
+        vis = vis & (k_lo + bs - 1 > q_lo - window)
+    return pb, vis
+
+
+def _kernel(tab_ref, qoff_ref, kvlen_ref,      # scalar prefetch
+            q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            mb: int, bq: int, bs: int, causal: bool, window: int,
+            scale: float):
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        softmax_init(m_ref, l_ref, acc_ref)
+
+    kvl = kvlen_ref[b]
+    q_lo = qoff_ref[b] + qi * bq
+    k_lo = ki * bs
+    _, visible = _block_visible(tab_ref, qoff_ref, kvlen_ref, b, qi, ki,
+                                bq=bq, bs=bs, causal=causal, window=window)
+
+    @pl.when(visible)
+    def _accumulate():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale      # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)              # (bs, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bs)
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bs), 0)
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bs), 1)
+        valid = k_pos < kvl
+        if causal:
+            valid = valid & (k_pos <= q_pos)
+        if window > 0:
+            valid = valid & (k_pos > q_pos - window)
+        s = jnp.where(valid, s, _NEG)
+        # rows of a partially-filled physical block past kv_len are
+        # unwritten pool memory; zero them so a 0-probability column can
+        # never propagate NaN/garbage through the p @ v contraction
+        col = jax.lax.broadcasted_iota(jnp.int32, (bs, 1), 0)
+        v = jnp.where(k_lo + col < kvl, v, 0.0)
+
+        softmax_update(s, v, m_ref, l_ref, acc_ref)
+
+    @pl.when(ki == mb - 1)
+    def _finalize():
+        o_ref[0, :, 0, :] = softmax_finalize(l_ref, acc_ref, o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "interpret"))
+def paged_attention_pallas(
+    q: jax.Array,             # (B, Tq, Hq, hd)
+    k_pool: jax.Array,        # (num_blocks, block_size, Hkv, hd)
+    v_pool: jax.Array,        # (num_blocks, block_size, Hkv, hd)
+    block_table: jax.Array,   # (B, max_blocks) int32, -1 = unallocated
+    q_offset: jax.Array,      # (B,) int32 absolute position of q[:, 0]
+    kv_len: jax.Array,        # (B,) int32 valid KV rows per table row
+    causal: bool = True,
+    window: int = 0,          # >0 → sliding-window band by absolute pos
+    block_q: int = 128,
+    interpret: bool = True,   # CPU container default
+) -> jax.Array:
+    b, t, hq, hd = q.shape
+    nb, bs, hkv = k_pool.shape[:3]
+    mb = block_table.shape[1]
+    g = hq // hkv
+    bq = min(block_q, t)
+    # non-divisible heads would make the index map read a clamped
+    # out-of-range KV head — plausible wrong outputs, so fail fast
+    assert hq % hkv == 0 and t % bq == 0, (hq, hkv, t, bq)
+    scale = hd**-0.5
+
+    tab = block_table.astype(jnp.int32)
+    qoff = q_offset.astype(jnp.int32)
+    kvl = kv_len.astype(jnp.int32)
+
+    def k_index(bi, h, qi, ki, tab_ref, qoff_ref, kvlen_ref):
+        # physical block for this logical step.  Steps the kernel body will
+        # skip (same ``_block_visible`` predicate) resolve to the row's
+        # FIRST block instead of their own: consecutive skipped steps then
+        # map to an unchanged index, so the pipeline's refetch elision
+        # issues no DMA for them and attention traffic is O(kv_len) rows,
+        # not O(allocated blocks) (clipped to 0 for fully-empty rows).
+        pb, vis = _block_visible(tab_ref, qoff_ref, kvlen_ref, bi, qi, ki,
+                                 bq=bq, bs=bs, causal=causal, window=window)
+        pb = jnp.where(vis, pb, tab_ref[bi, 0])
+        return (jnp.maximum(pb, 0), 0, h // g, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hq, t // bq, mb),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd),
+                         lambda bi, h, qi, ki, *_: (bi, qi, h, 0)),
+            pl.BlockSpec((1, bs, 1, hd), k_index),
+            pl.BlockSpec((1, bs, 1, hd), k_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd),
+                               lambda bi, h, qi, ki, *_: (bi, qi, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, mb=mb, bq=bq, bs=bs, causal=causal,
+                          window=window, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, t, hq, hd), q.dtype),
+        interpret=interpret,
+    )(tab, qoff, kvl, q, k_pool, v_pool)
+    return out

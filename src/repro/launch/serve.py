@@ -176,7 +176,9 @@ def _trace_mode(args, cfg, model, params, policy):
               f"({pg['num_blocks'] * pg['block_size']} rows vs "
               f"{args.slots * max_seq} dense-slab rows); "
               f"peak_in_use={pg['peak_blocks_in_use']} "
-              f"preemptions={pg['preemptions']}")
+              f"preemptions={pg['preemptions']}; "
+              f"attention={'pallas block-walk kernel' if pg['attention_kernel'] else 'jnp gather oracle'} "
+              f"(toggle: --pallas-kernels)")
     else:
         print("# paged KV: disabled (dense per-slot slab)")
     return 0

@@ -185,8 +185,11 @@ def attention(
                     defaults to arange(S).
       window:       sliding-window size (swa/local); None = full.
       impl:         "chunked" (jnp scans) or "flash" (Pallas kernel) — the
-                    kernel path covers the full-attention prefill/train case
-                    (T == S, no window/kv_len); everything else falls back.
+                    kernel path covers the self-attention prefill/train case
+                    (T == S, no kv_len), full **and** sliding-window: the
+                    kernel masks the band in-block and skips off-band KV
+                    blocks entirely.  Everything else falls back to the jnp
+                    scans.
     """
     B, T, Hq, hd = q.shape
     S = k.shape[1]
@@ -198,17 +201,24 @@ def attention(
     # masked chunked path
     from_zero = isinstance(q_offset, int) and q_offset == 0
 
-    if (impl == "flash" and T == S and T > 1 and window is None
-            and kv_len is None and kv_positions is None and from_zero):
+    bqk = min(128, T)
+    if (impl == "flash" and T == S and T > 1 and kv_len is None
+            and kv_positions is None and from_zero and T % bqk == 0
+            and (window is None or causal)):
         from repro.kernels.flash_attention import flash_attention_pallas
+        from repro.kernels.ops import default_interpret
 
-        # expand GQA KV to full heads for the single-head-stream kernel
-        kh = jnp.repeat(k, G, axis=2).transpose(0, 2, 1, 3)  # (B,Hq,S,hd)
-        vh = jnp.repeat(v, G, axis=2).transpose(0, 2, 1, 3)
+        # KV stays in grouped (B, Hkv, S, hd) layout — the kernel's index
+        # map resolves each query head to its KV head, so GQA is never
+        # head-repeated in HBM (this path is memory-bound; see kernel doc)
+        kh = k.transpose(0, 2, 1, 3)                         # (B,Hkv,S,hd)
+        vh = v.transpose(0, 2, 1, 3)
         qh = q.transpose(0, 2, 1, 3)
-        bq = bk = min(128, T)
         o = flash_attention_pallas(qh, kh, vh, causal=causal,
-                                   block_q=bq, block_k=bk)
+                                   window=0 if window is None
+                                   else min(window, S),
+                                   block_q=bqk, block_k=bqk,
+                                   interpret=default_interpret())
         return o.transpose(0, 2, 1, 3).astype(q.dtype)
 
     qg = (q * hd**-0.5).reshape(B, T, Hkv, G, hd)
@@ -237,33 +247,71 @@ def gather_kv_blocks(pool: jax.Array, block_table: jax.Array) -> jax.Array:
     ``block_table`` is ``(B, max_blocks)`` int32 mapping each row's logical
     block index to its physical block (``-1`` = unallocated).  Returns
     ``(B, max_blocks * block_size, Hkv, hd)``.  Unallocated entries clip to
-    block 0 — those logical positions are ≥ the row's ``pos``, so callers
-    must fence them with ``kv_len`` exactly as they fence stale rows of a
-    dense cache.
+    block 0 for the gather and their rows are then **zeroed**: those
+    logical positions are ≥ the row's ``pos`` and callers fence them with
+    ``kv_len``, but the softmax fence multiplies by probability 0 — which
+    is only a fence for *finite* garbage (0·NaN = NaN), so whatever block 0
+    happens to hold must never reach the contraction
+    (``tests/test_paged_kv.py`` poisons it to pin this).
     """
     nb, bs = pool.shape[:2]
     idx = jnp.clip(block_table, 0, nb - 1)
     g = jnp.take(pool, idx, axis=0)            # (B, max_blocks, bs, Hkv, hd)
+    g = jnp.where((block_table >= 0)[:, :, None, None, None], g, 0)
     b, mb = block_table.shape
     return g.reshape(b, mb * bs, *pool.shape[2:])
 
 
 def paged_attention(
-    q: jax.Array,
-    k_pool: jax.Array,
+    q: jax.Array,                  # (B, T, Hq, hd)
+    k_pool: jax.Array,             # (num_blocks, block_size, Hkv, hd)
     v_pool: jax.Array,
-    block_table: jax.Array,
-    **kwargs,
+    block_table: jax.Array,        # (B, max_blocks) int32, -1 = unallocated
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: jax.Array | int = 0,
+    kv_len: Optional[jax.Array] = None,
+    chunk: int = 1024,
+    use_kernel: bool = False,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """:func:`attention` over non-contiguous physical KV blocks.
+    """Attention over non-contiguous physical KV blocks.
 
-    Gathers per-row logical K/V views through the block table and runs the
-    standard online-softmax path — chunked sparse prefill at cache offsets
-    (``q_offset`` scalar) and vector-pos decode (``q_offset`` (B,)) both
-    work unchanged.  The gather materializes one logical view per call; a
-    fused Pallas paged-attention kernel that walks the table in-kernel is
-    the ROADMAP follow-up.
+    Dispatch ladder (the one PR 1 established for the projections):
+
+      1. ``use_kernel`` — the policy flag (``SparsityPolicy
+         .use_pallas_kernels``, threaded down by ``models/transformer``)
+         routes the call onto :func:`repro.kernels.paged_attention
+         .paged_attention_pallas`, which walks the block table in-kernel
+         and never materializes the gathered logical view;
+      2. ``REPRO_PALLAS_INTERPRET`` — ``1`` (CPU container default) runs
+         the kernel interpreted, ``0`` compiles it to Mosaic on a TPU;
+      3. the jnp gather-then-attend path below stays the bit-exact oracle
+         and the fallback for shapes the kernel does not cover (sliding
+         windows over paged pools, non-tile-divisible query counts).
+
+    Chunked sparse prefill at cache offsets (``q_offset`` scalar) and
+    vector-pos decode (``q_offset`` (B,)) both lower to the same kernel:
+    masking is by absolute positions either way.
     """
+    from repro.kernels.paged_attention import (paged_attention_pallas,
+                                               paged_kernel_covers)
+    B, T = q.shape[:2]
+    if (use_kernel and window is None and kv_len is not None
+            and paged_kernel_covers(T)):
+        from repro.kernels.ops import default_interpret
+
+        interp = default_interpret() if interpret is None else interpret
+        qo = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32).reshape(-1),
+                              (B,))
+        kvl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1),
+                               (B,))
+        return paged_attention_pallas(q, k_pool, v_pool, block_table, qo,
+                                      kvl, causal=causal,
+                                      block_q=min(128, T),
+                                      interpret=interp)
     k = gather_kv_blocks(k_pool, block_table)
     v = gather_kv_blocks(v_pool, block_table)
-    return attention(q, k, v, **kwargs)
+    return attention(q, k, v, causal=causal, window=window,
+                     q_offset=q_offset, kv_len=kv_len, chunk=chunk)

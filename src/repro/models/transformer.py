@@ -265,6 +265,10 @@ def _attn_block_apply(
         assert window is None, "paged KV does not cover sliding-window rings"
         nb, bs_ = cache["k"].shape[0], cache["k"].shape[1]
         mb = block_table.shape[1]
+        # same policy flag that routes projections onto the fused kernels
+        # sends paged attention through the in-kernel block-table walk
+        # (no gathered logical view); jnp gather stays the oracle fallback
+        use_kernel = bool(policy.use_pallas_kernels)
         flat_k = cache["k"].reshape(nb * bs_, cfg.n_kv_heads, cfg.head_dim)
         flat_v = cache["v"].reshape(nb * bs_, cfg.n_kv_heads, cfg.head_dim)
         if t == 1:  # vector-pos decode: every row writes at its own depth
@@ -278,7 +282,8 @@ def _attn_block_apply(
             o = paged_attention(q, ck, cv, block_table, causal=False,
                                 q_offset=posv,
                                 kv_len=jnp.minimum(posv + 1, mb * bs_),
-                                chunk=cfg.attn_chunk)
+                                chunk=cfg.attn_chunk,
+                                use_kernel=use_kernel)
         else:  # chunked prefill at offset ``pos`` (batch-1 slot path)
             assert b == 1, "paged chunked prefill is per-slot (batch 1)"
             cl = (chunk_len if chunk_len is not None
@@ -294,7 +299,8 @@ def _attn_block_apply(
             cv = fv.reshape(nb, bs_, cfg.n_kv_heads, cfg.head_dim)
             o = paged_attention(q, ck, cv, block_table, causal=True,
                                 q_offset=pos, kv_len=pos + cl,
-                                chunk=cfg.attn_chunk)
+                                chunk=cfg.attn_chunk,
+                                use_kernel=use_kernel)
         new_cache = {"k": ck, "v": cv}
     else:
         s_c = cache["k"].shape[1]

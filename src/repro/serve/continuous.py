@@ -147,6 +147,22 @@ class ContinuousServingEngine:
             spec = None
         self._spec = spec
         self.paged = spec is not None
+        # the projections' policy flag also routes paged attention through
+        # the in-kernel block-table walk (models/attention.paged_attention
+        # ladder); decode runs DENSE projections but must carry the flag so
+        # its attention takes the same path as prefill's
+        self.paged_kernel = self.paged and bool(policy.use_pallas_kernels)
+        if self.paged_kernel and not self._exact_chunks:
+            # a padded prefill bucket the kernel cannot tile would silently
+            # fall back to the gather oracle while metrics/--trace claimed
+            # the kernel ran — reject it here instead (exact-chunk archs
+            # emit power-of-two chunks, always covered; decode is T = 1)
+            from repro.kernels.paged_attention import paged_kernel_covers
+            assert paged_kernel_covers(cfg.chunk_size), (
+                "paged-attention kernel cannot tile chunk_size="
+                f"{cfg.chunk_size} (see kernels.paged_attention"
+                ".paged_kernel_covers); use a power-of-two chunk_size or "
+                "drop use_pallas_kernels")
         self.preemptions = 0
         if self.paged:
             self._max_blocks = max_blocks_per_slot(cfg.max_seq,
@@ -180,10 +196,12 @@ class ContinuousServingEngine:
                                                       self._spec)
             return prefill_fn
 
+        dense = DENSE.with_(use_pallas_kernels=policy.use_pallas_kernels)
+
         def decode_fn(params, cache, tokens, active, key):
             self.trace_counts["decode"] += 1
             logits, new_cache = self.model.decode_step(
-                params, tokens[:, None], cache, policy=DENSE)
+                params, tokens[:, None], cache, policy=dense)
             new_cache = slot_ops.where_active(active, new_cache, cache,
                                               self._spec)
             nxt = self._sample(logits, key)
@@ -198,7 +216,7 @@ class ContinuousServingEngine:
         # the "prefill_replay" key only appears) if a preemption happens
         # under a non-dense policy.
         self._prefill_replay_jit = jax.jit(
-            make_prefill_fn(DENSE, "prefill_replay"))
+            make_prefill_fn(dense, "prefill_replay"))
         self._decode_jit = jax.jit(decode_fn)
 
     # ------------------------------------------------------------- sampling
@@ -450,6 +468,7 @@ class ContinuousServingEngine:
                 "num_blocks": self.pool.num_blocks,
                 "peak_blocks_in_use": self.pool.peak_in_use,
                 "preemptions": self.preemptions - preempt0,
+                "attention_kernel": self.paged_kernel,
             } if self.paged else {"enabled": False}),
             "requests": [{
                 "rid": r.rid,

@@ -173,26 +173,9 @@ def test_ops_wrappers_survive_padding_shapes(rng):
 # ----------------------------------------------------------- dispatch layer
 
 def _count_pallas_calls(jaxpr) -> int:
-    def sub(v):
-        if hasattr(v, "jaxpr"):              # ClosedJaxpr
-            return [v.jaxpr]
-        if hasattr(v, "eqns"):               # Jaxpr
-            return [v]
-        if isinstance(v, (tuple, list)):
-            out = []
-            for item in v:
-                out.extend(sub(item))
-            return out
-        return []
-
-    count = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            count += 1
-        for v in eqn.params.values():
-            for j in sub(v):
-                count += _count_pallas_calls(j)
-    return count
+    from jaxpr_utils import iter_eqns
+    return sum(1 for e in iter_eqns(jaxpr)
+               if e.primitive.name == "pallas_call")
 
 
 def test_sparse_linear_lowers_to_single_pallas_call(rng):

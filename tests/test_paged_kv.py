@@ -102,20 +102,26 @@ def test_blocks_for():
 
 # --------------------------------------------- engine under a 50% pool
 
-def test_half_pool_token_identical_one_trace(tiny):
+@pytest.mark.parametrize("attn_kernel", [False, True],
+                         ids=["gather-oracle", "pallas-kernel"])
+def test_half_pool_token_identical_one_trace(tiny, attn_kernel, monkeypatch):
     """Acceptance: pool at 50% of num_slots*max_seq, staggered greedy
     outputs token-identical to the one-shot engine, one compile per shape
-    bucket."""
+    bucket — on the jnp gather oracle AND (ISSUE-4) on the Pallas
+    block-table-walk kernel under REPRO_PALLAS_INTERPRET=1."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
     cfg, model, params = tiny
+    policy = DENSE.with_(use_pallas_kernels=True) if attn_kernel else DENSE
     slots, bs = 3, 8
     half_pool = (slots * MAX_SEQ) // (2 * bs)          # 50% of the slab
     lens, arrivals, max_new = [5, 21, 13, 30, 9], [0, 0, 2, 4, 7], \
         [8, 10, 6, 8, 12]
     prompts = _prompts(cfg, lens)
-    eng, res = _serve(model, params, DENSE, prompts, arrivals, max_new,
+    eng, res = _serve(model, params, policy, prompts, arrivals, max_new,
                       num_slots=slots, chunk_size=16,
                       block_size=bs, num_blocks=half_pool)
     assert eng.paged and eng.pool.num_blocks == half_pool
+    assert res["metrics"]["paged"]["attention_kernel"] is attn_kernel
     for i, p in enumerate(prompts):
         assert res["outputs"][i] == _oracle(model, params, DENSE, p,
                                             max_new[i]), f"request {i}"
@@ -213,3 +219,106 @@ def test_submit_rejects_over_pool_capacity(tiny):
         num_blocks=2))                     # 16 tokens of pool capacity
     with pytest.raises(AssertionError):
         eng.submit(np.arange(10, dtype=np.int32), max_new_tokens=10)
+
+
+# ------------------------------------------- unallocated-block fencing
+
+def test_unallocated_block_fence_survives_poison():
+    """Regression for the ``-1`` → block-0 clip contract: unallocated table
+    entries resolve to physical block 0 during the gather, so whatever
+    block 0 holds must NEVER reach an output.  Poison it with NaN (the one
+    value a 0-probability softmax fence cannot absorb, 0·NaN = NaN) and
+    assert paged prefill- and decode-shaped attention outputs are
+    bit-identical to the clean pool — on the jnp oracle and the kernel."""
+    from repro.models.attention import paged_attention
+    rng = np.random.default_rng(3)
+    nb, bs, mb, B, Hq, Hkv, hd = 12, 8, 6, 3, 4, 2, 16
+    kp = np.asarray(rng.normal(size=(nb, bs, Hkv, hd)), np.float32)
+    vp = np.asarray(rng.normal(size=(nb, bs, Hkv, hd)), np.float32)
+    # disjoint per-row prefixes over blocks 1..11; block 0 stays free
+    tab = np.full((B, mb), -1, np.int32)
+    tab[0, :3] = [5, 1, 8]
+    tab[1, :5] = [3, 9, 2, 7, 4]
+    tab[2, :2] = [6, 10]
+    assert (tab != 0).all()
+    poisoned_k = kp.copy()
+    poisoned_v = vp.copy()
+    poisoned_k[0] = np.nan
+    poisoned_v[0] = np.nan
+
+    q_pre = np.asarray(rng.normal(size=(B, 8, Hq, hd)), np.float32)
+    q_dec = np.asarray(rng.normal(size=(B, 1, Hq, hd)), np.float32)
+    posv = jnp.asarray([20, 37, 10], jnp.int32)
+    calls = {
+        "prefill": (q_pre, dict(causal=True,
+                                q_offset=jnp.asarray(13, jnp.int32),
+                                kv_len=jnp.asarray([21, 38, 15], jnp.int32),
+                                chunk=16)),
+        "decode": (q_dec, dict(causal=False, q_offset=posv,
+                               kv_len=posv + 1, chunk=16)),
+    }
+    for name, (q, kw) in calls.items():
+        for use_kernel in (False, True):
+            clean = paged_attention(
+                jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+                jnp.asarray(tab), use_kernel=use_kernel, interpret=True,
+                **kw)
+            dirty = paged_attention(
+                jnp.asarray(q), jnp.asarray(poisoned_k),
+                jnp.asarray(poisoned_v), jnp.asarray(tab),
+                use_kernel=use_kernel, interpret=True, **kw)
+            assert np.isfinite(np.asarray(dirty)).all(), \
+                f"{name} kernel={use_kernel}: NaN leaked through the fence"
+            np.testing.assert_array_equal(
+                np.asarray(clean), np.asarray(dirty),
+                err_msg=f"{name} kernel={use_kernel}")
+
+
+# -------------------------------------- no full-view gather on the hot path
+
+def _pool_gather_count(jaxpr, pool_shape) -> int:
+    """Count ``gather`` equations (jnp.take & friends) reading an operand
+    of the pooled-KV shape, recursing into sub-jaxprs (scan/pjit/remat)."""
+    from jaxpr_utils import iter_eqns
+    return sum(
+        1 for eqn in iter_eqns(jaxpr)
+        if eqn.primitive.name == "gather" and any(
+            tuple(getattr(getattr(v, "aval", None), "shape", ()))
+            == pool_shape for v in eqn.invars))
+
+
+def test_paged_hot_path_has_no_full_view_gather(tiny):
+    """Acceptance: with the kernel enabled, the jitted paged prefill-chunk
+    and decode programs contain NO gather that reads the pooled KV leaves
+    (the O(max_blocks·block_size) logical-view materialization) — and with
+    it disabled the oracle gather is still there (the check bites)."""
+    from repro.serve import slots as slot_ops
+    from repro.serve.paged import init_paged_cache, max_blocks_per_slot
+    cfg, model, params = tiny
+    slots, bs = 2, 8
+    mb = max_blocks_per_slot(MAX_SEQ, bs)
+    nb = slots * mb
+    spec = model.paged_kv_spec()
+    cache = init_paged_cache(model, slots, MAX_SEQ, bs, nb, spec)
+    tab = np.full((slots, mb), -1, np.int32)
+    tab[0, :3] = [1, 2, 3]
+    tab[1, :3] = [4, 5, 6]
+    cache["block_table"] = jnp.asarray(tab)
+    cache["pos"] = jnp.asarray([10, 7], jnp.int32)
+    pool_shape = (nb, bs, cfg.n_kv_heads, cfg.head_dim)
+    kernel_pol = DENSE.with_(use_pallas_kernels=True)
+
+    toks = jnp.zeros((slots, 1), jnp.int32)
+    dec = lambda pol: jax.make_jaxpr(
+        lambda t, c: model.decode_step(params, t, c, policy=pol))(toks, cache)
+    assert _pool_gather_count(dec(kernel_pol).jaxpr, pool_shape) == 0
+    assert _pool_gather_count(dec(DENSE).jaxpr, pool_shape) > 0
+
+    sub = slot_ops.slice_slot(cache, jnp.asarray(0, jnp.int32), spec)
+    batch = {"tokens": jnp.zeros((1, 16), jnp.int32),
+             "chunk_len": jnp.asarray(16, jnp.int32)}
+    pre = lambda pol: jax.make_jaxpr(
+        lambda b, c: model.prefill_chunk(params, b, c, policy=pol))(batch,
+                                                                    sub)
+    assert _pool_gather_count(pre(kernel_pol).jaxpr, pool_shape) == 0
+    assert _pool_gather_count(pre(DENSE).jaxpr, pool_shape) > 0
