@@ -25,10 +25,17 @@ REQUIRED_KERNEL_ROWS = (
     "kernel/osparse_matmul/",
     "kernel/paged_attention/",
 )
+# scheduler-level rows gated by bench-smoke (serving table): prefix_reuse
+# embeds its own hit-rate / skip-fraction / token-identity PASS gate in
+# the derived column, which the FAIL scan below enforces
+REQUIRED_SERVING_ROWS = (
+    "serving/prefix_reuse",
+)
+REQUIRED_ROWS = REQUIRED_KERNEL_ROWS + REQUIRED_SERVING_ROWS
 
 
 def check_trajectory(path: str,
-                     required=REQUIRED_KERNEL_ROWS) -> List[str]:
+                     required=REQUIRED_ROWS) -> List[str]:
     """Returns a list of problems with the LATEST run in the trajectory
     (empty = healthy)."""
     try:
@@ -44,13 +51,27 @@ def check_trajectory(path: str,
     for prefix in required:
         matches = [r for r in rows if str(r.get("name", "")).startswith(prefix)]
         if not matches:
-            errors.append(f"missing kernel row {prefix}*")
+            errors.append(f"missing required row {prefix}*")
         for r in matches:
+            derived = str(r.get("derived", ""))
+            # a required scenario that self-reports SKIP (e.g. paging
+            # auto-disabled for the bench arch) still fails the gate, but
+            # with the real cause instead of a bogus 0.0-timing complaint
+            if "SKIP" in derived:
+                errors.append(
+                    f"{r['name']}: required row was skipped ({derived})")
+                continue
             us = r.get("us_per_call")
             if not (isinstance(us, (int, float)) and math.isfinite(us)
                     and us > 0):
                 errors.append(
                     f"{r['name']}: non-finite us_per_call {us!r}")
+            # required rows embed their correctness claims (ordering,
+            # token-identity, reuse rates) as PASS/FAIL in derived —
+            # a FAIL must fail the artifact gate, not just run.py's exit
+            if "FAIL" in derived:
+                errors.append(f"{r['name']}: derived claims FAIL "
+                              f"({derived})")
     return errors
 
 

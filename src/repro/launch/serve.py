@@ -50,6 +50,13 @@ def main(argv=None):
                     help="global block-pool size; default covers "
                          "slots*max_seq (no memory pressure) — size it "
                          "lower to exercise admission gating + preemption")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable block-level prefix caching across "
+                         "requests (refcounted content-addressed pool; "
+                         "on by default under --trace paged serving)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend the same N-token system prompt to every "
+                         "--trace request (exercises the prefix cache)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -126,15 +133,21 @@ def _trace_mode(args, cfg, model, params, policy):
     lens = rng.integers(lo, hi + 1, args.num_requests)
     max_seq = hi + args.new_tokens + 8
 
+    max_seq += args.shared_prefix
     eng = ContinuousServingEngine(model, policy, ContinuousConfig(
         max_seq=max_seq, num_slots=args.slots, chunk_size=args.chunk,
         temperature=args.temperature, seed=args.seed,
         paged=not args.no_paged, block_size=args.block_size,
-        num_blocks=args.num_blocks))
+        num_blocks=args.num_blocks,
+        prefix_cache=not args.no_prefix_cache))
+    sysp = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(99), (args.shared_prefix,), 0, cfg.vocab_size))
     extras = {}
     for i in range(args.num_requests):
         toks = np.asarray(jax.random.randint(
             jax.random.PRNGKey(100 + i), (int(lens[i]),), 0, cfg.vocab_size))
+        if args.shared_prefix:
+            toks = np.concatenate([sysp, toks])
         rid = eng.submit(toks, max_new_tokens=args.new_tokens,
                          arrival=int(arrivals[i]))
         ex = {}
@@ -176,9 +189,23 @@ def _trace_mode(args, cfg, model, params, policy):
               f"({pg['num_blocks'] * pg['block_size']} rows vs "
               f"{args.slots * max_seq} dense-slab rows); "
               f"peak_in_use={pg['peak_blocks_in_use']} "
-              f"preemptions={pg['preemptions']}; "
+              f"preemptions={pg['preemptions']} "
+              f"rejections={pg['rejections']}; "
               f"attention={'pallas block-walk kernel' if pg['attention_kernel'] else 'jnp gather oracle'} "
               f"(toggle: --pallas-kernels)")
+        if pg["prefix_cache"]:
+            pct = (100.0 * pg["tokens_skipped"]
+                   / max(pg["prefill_tokens"], 1))
+            print(f"# prefix cache: hits={pg['prefix_hits']} requests, "
+                  f"blocks_reused={pg['blocks_reused']}, "
+                  f"tokens_skipped={pg['tokens_skipped']}/"
+                  f"{pg['prefill_tokens']} ({pct:.0f}% of prefill rows), "
+                  f"cached_blocks={pg['cached_blocks']}, "
+                  f"evictions={pg['evictions']} "
+                  f"(--shared-prefix N to exercise; --no-prefix-cache "
+                  f"to disable)")
+        else:
+            print("# prefix cache: disabled")
     else:
         print("# paged KV: disabled (dense per-slot slab)")
     return 0

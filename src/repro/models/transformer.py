@@ -285,6 +285,13 @@ def _attn_block_apply(
                                 chunk=cfg.attn_chunk,
                                 use_kernel=use_kernel)
         else:  # chunked prefill at offset ``pos`` (batch-1 slot path)
+            # ``pos`` may be nonzero on a request's FIRST chunk: with
+            # block-level prefix caching (serve/paged.py) admission maps
+            # already-computed blocks into the table and starts the slot at
+            # the first non-cached token.  Writes only ever target
+            # wpos >= pos, and a cached prefix is always a whole number of
+            # blocks, so shared (refcount > 1) blocks — table indices
+            # < pos // bs — are read-only here by construction.
             assert b == 1, "paged chunked prefill is per-slot (batch 1)"
             cl = (chunk_len if chunk_len is not None
                   else jnp.asarray(t, jnp.int32))
@@ -665,9 +672,12 @@ def prefill_chunk(
     ``batch["tokens"]`` is ``(B, C)``; ``batch["chunk_len"]`` (traced scalar,
     default C) marks how many leading tokens are valid — the padded tail is
     masked out of both the KV writes and the attention.  The chunk attends
-    causally over everything the cache already holds (earlier chunks of the
-    same request), so feeding a prompt through in C-token chunks reproduces
-    the one-shot prefill.  Recurrent blocks (rwkv6 / rglru) carry their state
+    causally over everything the cache already holds — earlier chunks of
+    the same request, or (paged caches) prefix blocks another request
+    computed that admission mapped into this slot's table with ``pos``
+    advanced past them — so feeding a prompt through in C-token chunks,
+    from any starting offset with valid cached KV below it, reproduces the
+    one-shot prefill.  Recurrent blocks (rwkv6 / rglru) carry their state
     through the cache but cannot mask padded tokens out of their scans — for
     those archs the caller must send fully-valid chunks (chunk_len == C; the
     serving engine decomposes prompts dyadically to guarantee it).

@@ -9,7 +9,11 @@ iteration:
   1. **admit** — waiting requests whose arrival time has passed claim free
      slots FCFS, gated by a block-budget check (the pool must cover the
      prompt); the slot's recurrent state is zeroed and its block table row
-     populated;
+     populated.  With prefix caching on, the longest indexed block-prefix
+     of the prompt (shared system prompt, few-shot template, or this
+     request's own preemption replay) is acquired instead of recomputed:
+     the shared block ids go straight into the table, the slot's ``pos``
+     starts at the first non-cached token, and prefill begins mid-sequence;
   2. **prefill** — the oldest admitted-but-unprefilled request advances by
      one fixed-size token chunk through the Amber-sparse projection path
      (``model.prefill_chunk``), scattering KV through its block table;
@@ -53,11 +57,18 @@ import numpy as np
 
 from repro.core.policy import DENSE, SparsityPolicy
 from repro.serve import slots as slot_ops
-from repro.serve.paged import BlockPool, init_paged_cache, max_blocks_per_slot
+from repro.serve.paged import (BlockPool, chain_block_hashes,
+                               init_paged_cache, max_blocks_per_slot)
 
 __all__ = ["ContinuousConfig", "Request", "ContinuousServingEngine"]
 
 WAITING, PREFILL, DECODE, DONE = "waiting", "prefill", "decode", "done"
+# terminal without ever running: admission proved the request can NEVER
+# fit the block pool (its replay sequence outgrew capacity) — rejecting it
+# keeps strict-FCFS admission from waiting on it forever and starving the
+# queue behind it (head-of-line livelock, ISSUE-5 bugfix)
+REJECTED = "rejected"
+_TERMINAL = (DONE, REJECTED)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +87,15 @@ class ContinuousConfig:
     # None → num_slots * ceil(max_seq / block_size): same capacity as the
     # dense slab, paged mechanics.  The memory win is sizing it LOWER and
     # letting admission gating + preemption absorb the pressure.
+    prefix_cache: bool = True
+    # block-level prefix caching across requests: full blocks are chain-
+    # hashed and refcounted so a request whose prompt repeats a cached
+    # prefix (shared system prompt, preemption replay) skips its prefill.
+    # Auto-disabled alongside paging, and for archs with recurrent blocks
+    # (their scan state cannot be restored from cached KV).
+    validate_pool: bool = False
+    # audit block-pool/refcount/ownership invariants after every scheduler
+    # iteration (O(num_blocks) host work) — test/debug instrumentation.
 
 
 @dataclasses.dataclass
@@ -92,6 +112,13 @@ class Request:
     out: List[int] = dataclasses.field(default_factory=list)
     blocks: List[int] = dataclasses.field(default_factory=list)
     kv_len: int = 0                    # KV rows held (host mirror of pos)
+    shared: int = 0                    # leading blocks reused from the index
+    registered: int = 0                # leading blocks published to the index
+    cached_tokens: int = 0             # prefill rows skipped via prefix hits
+    # memoized chain hashes of this request's full blocks; token content
+    # never changes for an already-hashed block (out only appends), so the
+    # chain survives preemption and extends in O(new blocks)
+    hash_chain: List[int] = dataclasses.field(default_factory=list)
     preempted: int = 0                 # times requeued by the block pool
     admitted_iter: int = -1
     first_token_iter: int = -1
@@ -164,12 +191,28 @@ class ContinuousServingEngine:
                 ".paged_kernel_covers); use a power-of-two chunk_size or "
                 "drop use_pallas_kernels")
         self.preemptions = 0
+        self.rejections = 0
+        self.preempt_log: List[tuple] = []      # (rid, state-when-preempted)
+        # prefix caching needs every piece of continuation state to live in
+        # the paged KV pool: archs with recurrent blocks carry scan state
+        # that cached blocks cannot restore, so they stay cache-off even
+        # though their attention leaves are paged
+        self.prefix_cache = (self.paged and cfg.prefix_cache
+                             and not self._exact_chunks)
+        self.prefix_hits = 0        # admissions that reused ≥ 1 block
+        self.blocks_reused = 0      # total shared-block acquisitions
+        self.tokens_skipped = 0     # prefill rows served from the index
+        self.prefill_demand = 0     # prefill rows requested at admission
+        self._extra_rids: set = set()   # requests with modality extras:
+        # their hidden states depend on non-token inputs, so token-id chain
+        # hashes cannot address their KV — excluded from the prefix index
         if self.paged:
             self._max_blocks = max_blocks_per_slot(cfg.max_seq,
                                                    cfg.block_size)
             nb = (cfg.num_blocks if cfg.num_blocks is not None
                   else cfg.num_slots * self._max_blocks)
-            self.pool: Optional[BlockPool] = BlockPool(nb, cfg.block_size)
+            self.pool: Optional[BlockPool] = BlockPool(
+                nb, cfg.block_size, prefix_cache=self.prefix_cache)
             self._host_table = np.full((cfg.num_slots, self._max_blocks),
                                        -1, np.int32)
             self._table_dirty = True
@@ -256,6 +299,32 @@ class ContinuousServingEngine:
                                    np.asarray(req.out, np.int32)])
         return req.tokens
 
+    def _chain_for(self, req: Request, tokens: np.ndarray,
+                   n_full: int) -> List[int]:
+        """First ``n_full`` chain hashes of the request's sequence,
+        extending the memoized chain only over blocks not yet hashed."""
+        chain = req.hash_chain
+        if n_full > len(chain):
+            dense_from = len(req.tokens) if self.policy.enabled else None
+            chain.extend(chain_block_hashes(
+                tokens, self.pool.block_size, n_full, dense_from,
+                start=len(chain), h0=chain[-1] if chain else None))
+        return chain[:n_full]
+
+    def _match_prefix(self, req: Request, seq: np.ndarray) -> List[int]:
+        """Longest indexed block-prefix of the request's prefill sequence.
+        Capped at ``len(seq) - 1`` tokens: at least one token must run
+        through prefill to produce the logits the next token samples from,
+        so the request's last block is always a fresh allocation (and a
+        partially-covered tail block has no full-block hash anyway) —
+        shared blocks are therefore never writable."""
+        if not self.prefix_cache or req.rid in self._extra_rids:
+            return []
+        n_full = (len(seq) - 1) // self.pool.block_size
+        if n_full == 0:
+            return []
+        return self.pool.match(self._chain_for(req, seq, n_full))
+
     def _admit(self, it: int) -> None:
         # FCFS by arrival, not submission order: requests may be submitted
         # with out-of-order arrival times (and preempted requests requeue
@@ -263,34 +332,104 @@ class ContinuousServingEngine:
         for req in sorted(self.requests, key=lambda r: (r.arrival, r.rid)):
             if req.state != WAITING or req.arrival > it:
                 continue
+            if self.paged:
+                seq = self._seq(req)
+                need = self.pool.blocks_for(len(seq))
+                if need > min(self.pool.num_blocks, self._max_blocks):
+                    # can NEVER fit: strict FCFS would wait on it forever
+                    # and starve every request behind it (head-of-line
+                    # livelock) — reject with a terminal state instead.
+                    # ``submit`` already bounds prompt+max_new, and a
+                    # replay sequence (prompt + emitted) stays under that
+                    # bound, so through the public API this is a
+                    # defense-in-depth backstop: it converts any capacity
+                    # drift (out-of-band enqueues, future scheduler
+                    # changes shrinking the pool) into a visible REJECTED
+                    # request instead of a silent queue stall
+                    req.state = REJECTED
+                    req.done_iter = it
+                    self.rejections += 1
+                    continue
             if not self._free_slots:
                 break
+            skip = 0
             if self.paged:
-                need = self.pool.blocks_for(len(self._seq(req)))
-                if need > self.pool.available:
+                shared = self._match_prefix(req, seq)
+                # full feasibility BEFORE taking anything: reviving a
+                # zero-ref cached hit consumes availability (sharing a
+                # live block does not), and the fresh remainder must fit
+                # what is left — so a refused admission never touches the
+                # pool (no rollback, no phantom peak_in_use spike)
+                revive = sum(map(self.pool.is_cached, shared))
+                if need - len(shared) > self.pool.available - revive:
                     # strict FCFS: the oldest waiting request admits first;
                     # skipping ahead would starve long prompts under
                     # sustained short-prompt traffic
                     break
-                req.blocks = self.pool.alloc(need)
+                for b in shared:
+                    self.pool.acquire_cached(b)
+                req.blocks = shared + self.pool.alloc(need - len(shared))
+                req.shared = req.registered = len(shared)
+                skip = len(shared) * self.pool.block_size
+                req.cached_tokens += skip
+                self.prefill_demand += len(seq)
+                self.tokens_skipped += skip
+                self.blocks_reused += len(shared)
+                if shared:
+                    self.prefix_hits += 1
             slot = self._free_slots.pop(0)
-            self.cache = slot_ops.reset_slot(self.cache, slot, self._spec)
+            # prefix-cached rows are already valid KV: start the slot's pos
+            # at the first non-cached token so the first prefill chunk runs
+            # mid-sequence (prefill_chunk scatters/attends at cache offsets
+            # either way); reset never touches pooled leaves, so the shared
+            # blocks other slots may be reading survive the slot handoff
+            self.cache = slot_ops.reset_slot(self.cache, slot, self._spec,
+                                             pos=skip)
             if self.paged:
                 self._host_table[slot, :] = -1
                 self._host_table[slot, :len(req.blocks)] = req.blocks
                 self._table_dirty = True
             req.slot, req.state = slot, PREFILL
+            req.filled = req.kv_len = skip
             req.admitted_iter = it
             self._slot_req[slot] = req
+
+    def _register_blocks(self, req: Request) -> None:
+        """Publish the request's full blocks in the prefix index.  KV rows
+        0..kv_len-1 hold the tokens ``(prompt ++ out)[:kv_len]`` (a freshly
+        sampled token's own KV is only written when it is next fed back
+        in), so full blocks are content-addressable by that token chain.
+        Called whenever row content is final AND worth publishing: after
+        each prefill chunk, and — to pick up decode-written rows — right
+        before the blocks are released at preemption or completion."""
+        if not self.prefix_cache or req.rid in self._extra_rids:
+            return
+        bs = self.pool.block_size
+        n_full = min(req.kv_len // bs, len(req.blocks))
+        if n_full <= req.registered:
+            return
+        hashes = self._chain_for(req, self._seq(req)[:req.kv_len], n_full)
+        for i in range(req.registered, n_full):
+            self.pool.register(req.blocks[i], hashes[i])
+        req.registered = n_full
 
     def _preempt(self, req: Request) -> None:
         """Requeue ``req`` (recompute-on-readmission): its blocks return to
         the pool, its slot frees, and its emitted tokens stay on the
-        request to be replayed through prefill when it is re-admitted."""
+        request to be replayed through prefill when it is re-admitted.
+        Full blocks are registered first, so as long as they survive in
+        the zero-ref LRU the replay is nearly free: the replayed
+        prompt+emitted prefix re-matches exactly what was just released."""
         self.preemptions += 1
         req.preempted += 1
-        self.pool.release(req.blocks)
+        self.preempt_log.append((req.rid, req.state))
+        self._register_blocks(req)
+        # deepest blocks first: chain hashes only match a CONTIGUOUS prefix
+        # from block 0, so eviction must consume chains tail-first — the
+        # reversed release order parks the chain head at the MRU end
+        self.pool.release(req.blocks[::-1])
         req.blocks = []
+        req.shared = req.registered = 0
         self._host_table[req.slot, :] = -1
         self._table_dirty = True
         self._free_slots.append(req.slot)
@@ -329,8 +468,10 @@ class ContinuousServingEngine:
         anchor = req.arrival_time if req.arrival_time >= 0 else t0
         req.done_time = time.perf_counter() - anchor
         if self.paged and req.blocks:
-            self.pool.release(req.blocks)
+            self._register_blocks(req)
+            self.pool.release(req.blocks[::-1])   # chain head → MRU end
             req.blocks = []
+            req.shared = req.registered = 0
             self._host_table[req.slot, :] = -1
             self._table_dirty = True
         self._free_slots.append(req.slot)
@@ -339,10 +480,45 @@ class ContinuousServingEngine:
     def clear(self) -> None:
         """Drop completed requests (e.g. after a warmup pass) so a fresh
         stream can be submitted and measured on the already-compiled
-        engine."""
-        assert all(r.state == DONE for r in self.requests), \
+        engine.  The prefix index deliberately survives: a warm cache
+        across streams is the production behavior being measured."""
+        assert all(r.state in _TERMINAL for r in self.requests), \
             "cannot clear with requests in flight"
         self.requests = []
+        # rids restart at 0 for the next stream: stale modality-extras
+        # exclusions must not leak onto unrelated rid-colliding requests
+        self._extra_rids = set()
+
+    # ---------------------------------------------------------- auditing
+    def _audit_pool(self) -> None:
+        """Refcount/ownership invariants (cfg.validate_pool): the pool's
+        internal partition holds, every live reference is accounted to
+        exactly one slot-holding request, and no block is simultaneously
+        writable from two slots.  A request's writable frontier is block
+        ``kv_len // block_size`` onward (rows below kv_len are final);
+        everything it can still write must be exclusively owned and
+        unpublished — shared/registered blocks are full and immutable."""
+        pool = self.pool
+        pool.check_invariants()
+        expect: Dict[int, int] = {}
+        writable: Dict[int, int] = {}
+        for r in self.requests:
+            if r.state not in (PREFILL, DECODE):
+                assert not r.blocks, \
+                    f"r{r.rid} ({r.state}) still holds blocks {r.blocks}"
+                continue
+            for b in r.blocks:
+                expect[b] = expect.get(b, 0) + 1
+            for b in r.blocks[r.kv_len // pool.block_size:]:
+                assert b not in writable, \
+                    f"block {b} writable from r{writable[b]} AND r{r.rid}"
+                writable[b] = r.rid
+                assert pool.refcount(b) == 1, \
+                    f"writable block {b} of r{r.rid} is shared"
+                assert not pool.is_registered(b), \
+                    f"writable block {b} of r{r.rid} is published"
+        assert expect == dict(pool._ref), \
+            f"refcount skew: requests hold {expect}, pool says {pool._ref}"
 
     # ------------------------------------------------------------ phases
     def _sync_table(self) -> None:
@@ -383,6 +559,9 @@ class ContinuousServingEngine:
             jnp.asarray(tokens), jnp.asarray(clen, jnp.int32), ex)
         req.filled += clen
         req.kv_len += clen
+        # publish blocks the chunk just completed: a request admitted
+        # while this one is still decoding can already share its prompt
+        self._register_blocks(req)
         if req.filled == len(self._seq(req)):   # seq ingested: sample
             tok = int(self._sample(logits, key))
             req.out.append(tok)
@@ -428,13 +607,17 @@ class ContinuousServingEngine:
             else:
                 self.cache = slot_ops.init_slot_cache(
                     self.model, self.cfg.num_slots, self.cfg.max_seq)
+        self._extra_rids |= set(extras)
         key = jax.random.PRNGKey(self.cfg.seed)
         t0 = time.perf_counter()
-        preempt0 = self.preemptions
+        preempt0, reject0 = self.preemptions, self.rejections
+        hits0, reused0 = self.prefix_hits, self.blocks_reused
+        skipped0, demand0 = self.tokens_skipped, self.prefill_demand
         if self.paged:
             self.pool.peak_in_use = self.pool.in_use   # per-run peak
+            evict0 = self.pool.evictions
         it = 0
-        while any(r.state != DONE for r in self.requests):
+        while any(r.state not in _TERMINAL for r in self.requests):
             assert it < self.cfg.max_iters, "scheduler stuck"
             now = time.perf_counter()
             for r in self.requests:      # anchor wall-clock latency at arrival
@@ -453,6 +636,8 @@ class ContinuousServingEngine:
             if decoding:
                 key, sub = jax.random.split(key)
                 self._decode_all(params, decoding, it, t0, sub)
+            if self.paged and self.cfg.validate_pool:
+                self._audit_pool()
             it += 1
         wall = time.perf_counter() - t0
         gen = sum(len(r.out) for r in self.requests)
@@ -468,12 +653,21 @@ class ContinuousServingEngine:
                 "num_blocks": self.pool.num_blocks,
                 "peak_blocks_in_use": self.pool.peak_in_use,
                 "preemptions": self.preemptions - preempt0,
+                "rejections": self.rejections - reject0,
                 "attention_kernel": self.paged_kernel,
+                "prefix_cache": self.prefix_cache,
+                "prefix_hits": self.prefix_hits - hits0,
+                "blocks_reused": self.blocks_reused - reused0,
+                "tokens_skipped": self.tokens_skipped - skipped0,
+                "prefill_tokens": self.prefill_demand - demand0,
+                "cached_blocks": self.pool.cached_blocks,
+                "evictions": self.pool.evictions - evict0,
             } if self.paged else {"enabled": False}),
             "requests": [{
                 "rid": r.rid,
                 "prompt_len": int(len(r.tokens)),
                 "arrival": r.arrival,
+                "state": r.state,
                 "admitted_iter": r.admitted_iter,
                 "first_token_iter": r.first_token_iter,
                 "done_iter": r.done_iter,
@@ -481,6 +675,7 @@ class ContinuousServingEngine:
                 "latency_s": r.done_time,
                 "n_out": len(r.out),
                 "preemptions": r.preempted,
+                "cached_tokens": r.cached_tokens,
             } for r in self.requests],
         }
         return {

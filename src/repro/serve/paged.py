@@ -14,8 +14,8 @@ every slot:
   * logical KV row ``p`` of a slot lives at physical flat row
     ``table[p // block_size] * block_size + p % block_size``.
 
-The :class:`BlockPool` free list is **host-side** (allocation decisions
-are scheduler decisions, not traced computation); only the small int32
+The :class:`BlockPool` is **host-side** (allocation decisions are
+scheduler decisions, not traced computation); only the small int32
 block-table array crosses to the device, so admission/release never
 retraces the jitted phases.  Recurrent state leaves (rwkv6 / rglru) are
 position-independent and stay per-slot; sliding-window rings are already
@@ -25,17 +25,37 @@ Sizing the pool below ``num_slots * ceil(max_seq / block_size)`` is the
 point: the engine admits by block budget instead of free slots alone, and
 preempts the youngest request (recompute on re-admission) when the pool
 runs dry mid-decode — see ``serve/README.md`` for the policy.
+
+Prefix caching (ISSUE 5)
+------------------------
+
+The pool is **refcounted and content-addressed**: a block whose rows are
+completely written gets a chain hash ``h_i = hash(h_{i-1}, tokens_i)``
+(see :func:`chain_block_hashes`) and is published in ``_index`` so later
+requests whose token prefix reproduces the chain can *acquire* the block
+(refcount += 1) instead of recomputing its KV.  ``release`` decrements;
+at refcount 0 a **registered** block is not freed but parked in an LRU of
+zero-ref cached blocks, evicted (index entry dropped) only when ``alloc``
+cannot be served from the free list — the pool never reports exhaustion
+while evictable cached blocks remain.  Only full, immutable blocks are
+ever registered; a request's partially-filled tail block is always a
+fresh exclusively-owned allocation, so no shared block is ever writable.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List
+from collections import Counter, OrderedDict, deque
+from typing import Any, Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.serve.slots import slot_axis
 
-__all__ = ["BlockPool", "init_paged_cache", "max_blocks_per_slot"]
+__all__ = ["BlockPool", "chain_block_hashes", "init_paged_cache",
+           "max_blocks_per_slot"]
+
+_HASH_SEED = 0x9E3779B9
 
 
 def max_blocks_per_slot(max_seq: int, block_size: int) -> int:
@@ -43,55 +63,238 @@ def max_blocks_per_slot(max_seq: int, block_size: int) -> int:
     return -(-max_seq // block_size)
 
 
-class BlockPool:
-    """Host-side free-list allocator over ``num_blocks`` fixed-size blocks.
+def chain_block_hashes(tokens, block_size: int,
+                       n_blocks: Optional[int] = None,
+                       dense_from: Optional[int] = None,
+                       start: int = 0,
+                       h0: Optional[int] = None) -> List[int]:
+    """Chain hashes for full blocks ``start .. n_blocks-1`` of a sequence.
 
-    Invariants (asserted, and exercised by ``tests/test_paged_kv.py``):
-    a block id is never handed out twice while allocated, and never
-    released twice.  Reuse is FIFO so fragmentation patterns (interleaved
-    alloc/free) sweep the whole pool rather than hammering one block.
+    ``h_i = hash((h_{i-1}, dense_rows_i, token_ids_in_block_i))`` — block
+    ``i`` is addressed by its *whole prefix*, not just its own tokens, so
+    an index hit guarantees the block's KV (which depends on every earlier
+    token through attention) is reusable.
+
+    ``dense_from`` marks the row index from which KV rows were produced by
+    the DENSE program (tokens a request *emitted*, first written by the
+    dense decode step and replayed dense after preemption) while rows
+    before it came from the sparse prefill path.  Under a sparse prefill
+    policy the same token ids yield different KV on the two paths, so the
+    per-block count of dense rows is folded into the hash: a request whose
+    own prompt extends into another request's emitted region hashes those
+    blocks differently and correctly misses.  Pass ``None`` when every row
+    takes one path (dense policy), which keeps hashes boundary-independent.
+
+    ``start``/``h0`` resume an existing chain incrementally: ``h0`` must
+    be the hash of block ``start - 1`` (``None`` = the seed, for
+    ``start == 0``) — callers that hash as a sequence grows memoize their
+    chain and pay only for the new blocks.
+    """
+    tokens = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    if n_blocks is None:
+        n_blocks = len(tokens) // block_size
+    assert n_blocks * block_size <= len(tokens), \
+        "chain hashes cover full blocks only"
+    assert (h0 is None) == (start == 0), "h0 must accompany a resume point"
+    h = _HASH_SEED if h0 is None else h0
+    out: List[int] = []
+    for i in range(start, n_blocks):
+        lo, hi = i * block_size, (i + 1) * block_size
+        dense = 0 if dense_from is None else max(0, hi - max(dense_from, lo))
+        h = hash((h, dense, tokens[lo:hi].tobytes()))
+        out.append(h)
+    return out
+
+
+class BlockPool:
+    """Host-side refcounted allocator over ``num_blocks`` fixed-size blocks.
+
+    Every block is in exactly one of three states (asserted by
+    :meth:`check_invariants`, exercised by ``tests/test_paged_kv.py`` and
+    ``tests/test_prefix_cache.py``):
+
+      * **free** — on the FIFO free list (a deque: reuse sweeps the whole
+        pool instead of hammering one block under fragmenting traffic);
+      * **allocated** — refcount ≥ 1 in ``_ref``; refcount > 1 means the
+        block is a registered prefix block shared read-only by several
+        live requests;
+      * **cached** — refcount dropped to 0 but the block is registered in
+        the prefix index; parked in an LRU and revived by
+        :meth:`acquire_cached` or reclaimed (evicted) by :meth:`alloc`.
+
+    ``alloc`` validates the ENTIRE operation before mutating anything
+    (ISSUE-5 bugfix: the old free list popped blocks before the
+    double-allocation assert could fire, corrupting pool state on the
+    failure path).
     """
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int,
+                 prefix_cache: bool = True):
         assert num_blocks > 0 and block_size > 0
         self.num_blocks = num_blocks
         self.block_size = block_size
-        self._free: List[int] = list(range(num_blocks))
-        self._owned: set = set()
+        self.prefix_cache = prefix_cache
+        self._free: Deque[int] = deque(range(num_blocks))
+        self._ref: Dict[int, int] = {}           # block id → refcount ≥ 1
+        # zero-ref registered blocks, LRU → MRU; value = registered hash
+        self._cached: "OrderedDict[int, int]" = OrderedDict()
+        self._index: Dict[int, int] = {}         # chain hash → block id
+        self._hash_of: Dict[int, int] = {}       # block id → chain hash
         self.peak_in_use = 0
-        self.total_allocs = 0
+        self.total_allocs = 0                    # fresh allocations only
+        self.evictions = 0
 
+    # ------------------------------------------------------------ queries
     @property
     def available(self) -> int:
-        return len(self._free)
+        """Blocks obtainable without preempting anyone: free + evictable."""
+        return len(self._free) + len(self._cached)
 
     @property
     def in_use(self) -> int:
-        return self.num_blocks - len(self._free)
+        """Blocks currently referenced by at least one request."""
+        return len(self._ref)
+
+    @property
+    def cached_blocks(self) -> int:
+        """Zero-ref blocks retained for prefix reuse (evictable)."""
+        return len(self._cached)
 
     def blocks_for(self, n_tokens: int) -> int:
         """Blocks needed to hold ``n_tokens`` KV rows."""
         return -(-n_tokens // self.block_size)
 
+    def refcount(self, block_id: int) -> int:
+        return self._ref.get(block_id, 0)
+
+    def is_registered(self, block_id: int) -> bool:
+        return block_id in self._hash_of
+
+    def is_cached(self, block_id: int) -> bool:
+        """Zero-ref parked in the LRU (counted in :attr:`available`) —
+        reviving it consumes one unit of availability, unlike sharing an
+        already-live block."""
+        return block_id in self._cached
+
+    # --------------------------------------------------------- allocation
     def alloc(self, n: int) -> List[int]:
-        """Hand out ``n`` block ids; raises if the pool cannot cover it
-        (callers check :attr:`available` and preempt first)."""
-        if n > len(self._free):
+        """Hand out ``n`` fresh exclusively-owned blocks (refcount 1).
+
+        Draws from the free list first, then reclaims zero-ref cached
+        blocks LRU-first (dropping their prefix-index entries); raises if
+        even eviction cannot cover the request — callers check
+        :attr:`available` and preempt first.  All validation happens
+        before any state is mutated.
+        """
+        if n > self.available:
             raise RuntimeError(
-                f"block pool exhausted: want {n}, have {len(self._free)}")
-        ids = [self._free.pop(0) for _ in range(n)]
+                f"block pool exhausted: want {n}, have {self.available} "
+                f"({len(self._free)} free + {len(self._cached)} cached)")
+        take_free = min(n, len(self._free))
+        cand = [self._free[i] for i in range(take_free)]
+        evict: List[int] = []
+        if take_free < n:                        # LRU → MRU iteration order
+            lru = iter(self._cached)
+            evict = [next(lru) for _ in range(n - take_free)]
+        for i in cand + evict:
+            assert i not in self._ref, f"double allocation of block {i}"
+        assert len(set(cand + evict)) == n, "free list holds duplicates"
+        # ---- validated: now mutate
+        for _ in range(take_free):
+            self._free.popleft()
+        for i in evict:
+            h = self._cached.pop(i)
+            if self._index.get(h) == i:
+                del self._index[h]
+            self._hash_of.pop(i, None)
+            self.evictions += 1
+        ids = cand + evict
         for i in ids:
-            assert i not in self._owned, f"double allocation of block {i}"
-            self._owned.add(i)
+            self._ref[i] = 1
         self.total_allocs += n
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return ids
 
-    def release(self, ids: List[int]) -> None:
+    def acquire_cached(self, block_id: int) -> None:
+        """Take a reference on a prefix-index hit: revive a zero-ref cached
+        block (keeping its registration) or share a live one (refcount+1).
+        The caller may only write rows BEYOND the block — registered blocks
+        are full and immutable."""
+        if block_id in self._cached:
+            del self._cached[block_id]
+            self._ref[block_id] = 1
+        else:
+            assert block_id in self._ref, \
+                f"acquire_cached of unallocated block {block_id}"
+            self._ref[block_id] += 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+
+    def release(self, ids: Sequence[int]) -> None:
+        """Drop one reference per id; a block reaching refcount 0 is parked
+        in the prefix LRU if registered, else returned to the free list."""
+        need = Counter(ids)
+        for i, k in need.items():                # validate before mutating
+            assert self._ref.get(i, 0) >= k, \
+                f"release of unallocated block {i}"
         for i in ids:
-            assert i in self._owned, f"release of unallocated block {i}"
-            self._owned.remove(i)
-            self._free.append(i)
+            self._ref[i] -= 1
+            if self._ref[i] == 0:
+                del self._ref[i]
+                h = self._hash_of.get(i)
+                if h is not None and self._index.get(h) == i:
+                    self._cached[i] = h          # MRU end of the LRU
+                else:
+                    self._hash_of.pop(i, None)
+                    self._free.append(i)
+
+    # ------------------------------------------------------- prefix index
+    def register(self, block_id: int, chain_hash: int) -> bool:
+        """Publish a FULL block under its chain hash.  Returns False when
+        the hash is already indexed (first copy wins — the duplicate block
+        simply stays unregistered and frees normally) or when prefix
+        caching is off."""
+        if not self.prefix_cache:
+            return False
+        assert block_id in self._ref, "register of a block nobody owns"
+        if chain_hash in self._index:
+            return self._index[chain_hash] == block_id
+        prev = self._hash_of.get(block_id)
+        assert prev is None or prev == chain_hash, \
+            f"block {block_id} re-registered under a different hash"
+        self._hash_of[block_id] = chain_hash
+        self._index[chain_hash] = block_id
+        return True
+
+    def match(self, chain_hashes: Sequence[int]) -> List[int]:
+        """Longest indexed prefix of a hash chain → block ids (not yet
+        acquired; callers :meth:`acquire_cached` each hit)."""
+        ids: List[int] = []
+        for h in chain_hashes:
+            b = self._index.get(h)
+            if b is None:
+                break
+            ids.append(b)
+        return ids
+
+    # --------------------------------------------------------- invariants
+    def check_invariants(self) -> None:
+        """free / allocated / cached partition the pool; the prefix index
+        is a bijection onto registered live-or-cached blocks."""
+        free, cached, ref = list(self._free), set(self._cached), \
+            set(self._ref)
+        assert len(free) == len(set(free)), "free list holds duplicates"
+        assert not (set(free) & cached) and not (set(free) & ref) \
+            and not (cached & ref), "block in two states at once"
+        assert len(free) + len(cached) + len(ref) == self.num_blocks, \
+            "blocks leaked or conjured"
+        assert all(c >= 1 for c in self._ref.values()), "zero-ref in _ref"
+        assert set(self._index.values()) == set(self._hash_of), \
+            "index/registration skew"
+        for h, b in self._index.items():
+            assert self._hash_of.get(b) == h, f"hash mismatch on block {b}"
+            assert b in cached or b in ref, f"indexed block {b} is free"
+        for b, h in self._cached.items():
+            assert self._index.get(h) == b, f"cached block {b} unreachable"
 
 
 def init_paged_cache(model, num_slots: int, max_seq: int, block_size: int,

@@ -103,7 +103,8 @@ def write_slot(cache: Dict[str, Any], slot, sub: Dict[str, Any],
 
 
 def reset_slot(cache: Dict[str, Any], slot: int,
-               spec: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+               spec: Optional[Dict[str, Any]] = None,
+               pos: int = 0) -> Dict[str, Any]:
     """Zero one slot (host-side, static index) before admitting a request.
 
     Attention rows are already fenced off by kv_len / kv_position masks, but
@@ -112,11 +113,19 @@ def reset_slot(cache: Dict[str, Any], slot: int,
     cleared when a slot changes owner.  Pooled leaves are left untouched —
     block ownership is released host-side and stale rows are fenced by the
     block table (-1 rows scatter/gather nowhere live) and kv_len.
+
+    ``pos`` sets the slot's starting sequence position: 0 for a cold
+    request, or the number of prefix-cached KV rows when admission matched
+    shared blocks (serve/paged.py prefix index) — the first prefill chunk
+    then starts mid-sequence and attends over the reused prefix.  Callers
+    must separately install the shared block ids in the slot's table row;
+    shared blocks themselves are never cleared here (they are full,
+    immutable, and possibly read by other slots).
     """
     out: Dict[str, Any] = {}
     for key, sub in cache.items():
         if key == "pos":
-            out["pos"] = sub.at[slot].set(0)
+            out["pos"] = sub.at[slot].set(pos)
         elif key == "block_table":
             out[key] = sub.at[slot].set(-1)
         else:

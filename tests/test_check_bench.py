@@ -1,19 +1,21 @@
-"""The bench-smoke CI gate (benchmarks/check_bench.py) must catch the two
-silent failure modes: a kernel row dropping out of the trajectory and a
-row carrying a non-finite timing."""
+"""The bench-smoke CI gate (benchmarks/check_bench.py) must catch the
+silent failure modes: a required row dropping out of the trajectory, a
+row carrying a non-finite timing, and a derived column whose embedded
+correctness claim says FAIL."""
 import json
 
-from benchmarks.check_bench import REQUIRED_KERNEL_ROWS, check_trajectory
+from benchmarks.check_bench import (REQUIRED_KERNEL_ROWS, REQUIRED_ROWS,
+                                    REQUIRED_SERVING_ROWS, check_trajectory)
 
 
 def _run(rows):
-    return [{"utc": "2026-01-01T00:00:00", "tables": ["kernels"],
+    return [{"utc": "2026-01-01T00:00:00", "tables": ["kernels", "serving"],
              "rows": rows}]
 
 
 def _healthy_rows():
     return [{"name": p + "256x2048", "us_per_call": 12.5, "derived": "x"}
-            for p in REQUIRED_KERNEL_ROWS]
+            for p in REQUIRED_ROWS]
 
 
 def test_healthy_trajectory_passes(tmp_path):
@@ -38,6 +40,43 @@ def test_nonfinite_row_fails(tmp_path):
         p.write_text(json.dumps(_run(rows)))   # NaN/Infinity round-trip
         errs = check_trajectory(str(p))
         assert errs, f"accepted us_per_call={bad!r}"
+
+
+def test_missing_serving_row_fails(tmp_path):
+    """The prefix-reuse scheduler row is gated like the kernel rows —
+    dropping the serving table from bench-smoke must fail the check."""
+    assert REQUIRED_SERVING_ROWS and REQUIRED_KERNEL_ROWS
+    rows = [r for r in _healthy_rows()
+            if not r["name"].startswith("serving/prefix_reuse")]
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps(_run(rows)))
+    errs = check_trajectory(str(p))
+    assert errs and "serving/prefix_reuse" in errs[0]
+
+
+def test_skipped_required_row_fails_with_real_cause(tmp_path):
+    """A required row that self-reports SKIP (paging auto-disabled, say)
+    fails with the skip reason, not a confusing 0.0-timing error."""
+    rows = _healthy_rows()
+    rows[-1]["us_per_call"] = 0.0
+    rows[-1]["derived"] = "paging auto-disabled for this arch;SKIP"
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps(_run(rows)))
+    errs = check_trajectory(str(p))
+    assert len(errs) == 1 and "skipped" in errs[0]
+    assert "non-finite" not in errs[0]
+
+
+def test_derived_fail_claim_fails(tmp_path):
+    """A required row whose derived column embeds FAIL (broken ordering
+    claim, token-identity miss, reuse-rate miss) fails the artifact gate
+    even though the timing itself is finite."""
+    rows = _healthy_rows()
+    rows[-1]["derived"] = "hit_requests=0/5;reuse_and_token_identical_vs_cold=FAIL"
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps(_run(rows)))
+    errs = check_trajectory(str(p))
+    assert errs and "FAIL" in errs[0]
 
 
 def test_only_latest_run_is_gated(tmp_path):

@@ -100,6 +100,28 @@ def test_blocks_for():
     assert pool.blocks_for(9) == 2
 
 
+def test_block_pool_alloc_validates_before_mutating():
+    """ISSUE-5 bugfix: the double-allocation check must fire BEFORE any
+    block leaves the free list — the old implementation popped first and
+    asserted after, so the failing path corrupted pool state.  Inject a
+    duplicate id into the free list and check the failed alloc leaves the
+    pool exactly as it found it."""
+    pool = BlockPool(num_blocks=4, block_size=2)
+    live = pool.alloc(2)
+    pool._free.appendleft(live[0])          # simulated corruption
+    free_before = list(pool._free)
+    ref_before = dict(pool._ref)
+    with pytest.raises(AssertionError, match="double allocation"):
+        pool.alloc(2)
+    assert list(pool._free) == free_before, "failed alloc mutated free list"
+    assert dict(pool._ref) == ref_before, "failed alloc leaked references"
+    # exhaustion is still validated first and still RuntimeError
+    pool._free.popleft()                    # undo the corruption
+    with pytest.raises(RuntimeError):
+        pool.alloc(3)
+    assert pool.available == 2 and pool.in_use == 2
+
+
 # --------------------------------------------- engine under a 50% pool
 
 @pytest.mark.parametrize("attn_kernel", [False, True],
@@ -210,6 +232,59 @@ def test_paged_auto_disabled_where_pointless():
     res = eng.run(params)
     assert res["metrics"]["paged"] == {"enabled": False}
     assert len(res["outputs"][0]) == 4
+
+
+def test_unservable_request_rejected_not_livelocked(tiny):
+    """ISSUE-5 bugfix (head-of-line livelock): a request whose replay
+    sequence can never fit the pool must be REJECTED at admission, not
+    waited on forever — strict FCFS would otherwise starve every request
+    behind it.  ``submit`` guards the normal path, so craft the oversized
+    request directly (as a preemption-grown replay would look)."""
+    from repro.serve.continuous import REJECTED, Request
+    cfg, model, params = tiny
+    eng = ContinuousServingEngine(model, DENSE, ContinuousConfig(
+        max_seq=MAX_SEQ, num_slots=2, chunk_size=8, block_size=8,
+        num_blocks=3))                      # pool holds 24 tokens
+    big = np.asarray(jax.random.randint(jax.random.PRNGKey(7), (30,), 0,
+                                        cfg.vocab_size), np.int32)
+    # blocks_for(30) = 4 > 3: unservable forever; enqueue behind nothing
+    # and ahead (by rid order at equal arrival) of a healthy request
+    eng.requests.append(Request(rid=0, tokens=big, max_new_tokens=4))
+    ok = _prompts(cfg, [10], seed0=95)[0]
+    eng.submit(ok, max_new_tokens=4, arrival=0)
+    res = eng.run(params)
+    reqs = {r["rid"]: r for r in res["metrics"]["requests"]}
+    assert reqs[0]["state"] == REJECTED and reqs[0]["n_out"] == 0
+    assert res["metrics"]["paged"]["rejections"] == 1
+    # the queue behind the dead request made progress and fully completed
+    assert reqs[1]["state"] == "done"
+    assert res["outputs"][1] == _oracle(model, params, DENSE, ok, 4)
+    assert eng.pool.in_use == 0
+
+
+def test_preempt_prefill_victim_interleaving(tiny):
+    """ISSUE-5 audit pin: ``_ensure_decode_blocks`` may preempt a victim
+    that is still in PREFILL, in the same scheduler iteration in which the
+    victim's chunk program already ran — its freed blocks can be handed to
+    a decoding slot immediately.  The host-table write ordering (victim row
+    -1'd and re-synced before the next device program) plus kv_len fencing
+    must keep the interleaving invisible: outputs stay token-identical.
+    Engineered deterministically: req0 decodes and crosses a block
+    boundary exactly while req1 (40-token prompt, 5 chunks) is mid-prefill
+    with the pool fully committed."""
+    from repro.serve.continuous import PREFILL
+    cfg, model, params = tiny
+    lens, arrivals, max_new = [8, 40], [0, 2], [24, 8]
+    prompts = _prompts(cfg, lens, seed0=85)
+    eng, res = _serve(model, params, DENSE, prompts, arrivals, max_new,
+                      num_slots=2, chunk_size=8, block_size=4,
+                      num_blocks=13, validate_pool=True)
+    assert any(rid == 1 and st == PREFILL for rid, st in eng.preempt_log), \
+        f"scenario drifted: preempt_log={eng.preempt_log}"
+    for i, p in enumerate(prompts):
+        assert res["outputs"][i] == _oracle(model, params, DENSE, p,
+                                            max_new[i]), f"request {i}"
+    assert eng.pool.in_use == 0
 
 
 def test_submit_rejects_over_pool_capacity(tiny):
