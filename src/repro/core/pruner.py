@@ -71,12 +71,24 @@ def sparse_matmul(
     oracle and the fallback for callers that need the mask itself.
     """
     if policy.use_pallas_kernels:
-        from repro.kernels import ops
+        # chaos-harness injection site (serve/faults.py, lazily imported to
+        # keep repro.core free of serving deps): dispatch happens at trace
+        # time, so "compile_error" aborts the trace with a KernelFault
+        # (nothing cached; the serving engine re-runs on its oracle jit)
+        # and "fallback" silently takes the jnp oracle path below
+        from repro.serve.faults import KernelFault, fire as _fire_fault
 
-        if policy.tile_consensus:
-            return ops.nm_spmm(x, w, scale, policy.n, policy.m,
-                               tile=policy.tile_size)
-        return ops.nm_prune_matmul(x, w, scale, policy.n, policy.m)
+        kind = _fire_fault("kernel.projection")
+        if kind == "compile_error":
+            raise KernelFault(
+                "injected N:M projection kernel compile failure")
+        if kind != "fallback":
+            from repro.kernels import ops
+
+            if policy.tile_consensus:
+                return ops.nm_spmm(x, w, scale, policy.n, policy.m,
+                                   tile=policy.tile_size)
+            return ops.nm_prune_matmul(x, w, scale, policy.n, policy.m)
 
     if not policy.tile_consensus:
         xp = prune_input(x, scale, policy)

@@ -57,6 +57,9 @@ def main(argv=None):
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="prepend the same N-token system prompt to every "
                          "--trace request (exercises the prefix cache)")
+    ap.add_argument("--ttl", type=int, default=None, metavar="ITERS",
+                    help="per-request deadline in scheduler iterations "
+                         "(--trace): requests exceeding it end TIMED_OUT")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -139,7 +142,8 @@ def _trace_mode(args, cfg, model, params, policy):
         temperature=args.temperature, seed=args.seed,
         paged=not args.no_paged, block_size=args.block_size,
         num_blocks=args.num_blocks,
-        prefix_cache=not args.no_prefix_cache))
+        prefix_cache=not args.no_prefix_cache,
+        ttl_default=args.ttl))
     sysp = np.asarray(jax.random.randint(
         jax.random.PRNGKey(99), (args.shared_prefix,), 0, cfg.vocab_size))
     extras = {}
@@ -166,19 +170,33 @@ def _trace_mode(args, cfg, model, params, policy):
     m = res["metrics"]
     print(f"# {args.num_requests} requests, λ={args.rate}/iter, "
           f"lens {lo}..{hi}, slots={args.slots}, chunk={args.chunk}")
-    print("rid,prompt_len,arrival,first_token_iter,done_iter,"
-          "latency_iters,latency_s,n_out,preemptions")
+    print("rid,prompt_len,arrival,state,first_token_iter,done_iter,"
+          "latency_iters,latency_s,n_out,preemptions,retries")
     for r in m["requests"]:
-        print(f"{r['rid']},{r['prompt_len']},{r['arrival']},"
+        print(f"{r['rid']},{r['prompt_len']},{r['arrival']},{r['state']},"
               f"{r['first_token_iter']},{r['done_iter']},"
               f"{r['latency_iters']},{r['latency_s']:.3f},{r['n_out']},"
-              f"{r['preemptions']}")
+              f"{r['preemptions']},{r['retries']}")
     lat = [r["latency_iters"] for r in m["requests"]]
     print(f"# throughput: {m['generated_tokens']} tokens in "
           f"{m['wall_s']:.2f}s = {m['tokens_per_s']:.1f} tok/s "
           f"over {m['iterations']} iterations")
     print(f"# latency iters p50/p95: {int(np.percentile(lat, 50))}/"
           f"{int(np.percentile(lat, 95))}")
+    lc = m["lifecycle"]
+    ts = lc["terminal_states"]
+    print(f"# terminal states: done={ts['done']} rejected={ts['rejected']} "
+          f"timed_out={ts['timed_out']} cancelled={ts['cancelled']}")
+    print(f"# lifecycle: degraded_iterations={m['degraded_iterations']} "
+          f"admission_retries={lc['admission_retries']} "
+          f"watchdog_trips={lc['watchdog_trips']} "
+          f"restores={lc['restores']} faults_fired={lc['faults_fired']}")
+    terminal = ("done", "rejected", "timed_out", "cancelled")
+    leaked = [r["rid"] for r in m["requests"] if r["state"] not in terminal]
+    if leaked:
+        print(f"# ERROR: {len(leaked)} request(s) leaked in a non-terminal "
+              f"state at drain: rids {leaked}")
+        return 1
     print(f"# traces: prefill={m['trace_counts']['prefill']} "
           f"decode={m['trace_counts']['decode']} (shape buckets: "
           f"chunk={args.chunk}, decode batch={args.slots})")

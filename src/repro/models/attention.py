@@ -300,17 +300,29 @@ def paged_attention(
     B, T = q.shape[:2]
     if (use_kernel and window is None and kv_len is not None
             and paged_kernel_covers(T)):
-        from repro.kernels.ops import default_interpret
+        # chaos-harness injection site (serve/faults.py): this dispatch
+        # runs at trace time, so a "compile_error" KernelFault aborts the
+        # trace cleanly (nothing cached, engine degrades to the oracle jit)
+        # and "fallback" silently takes the gather-oracle branch below —
+        # either fires only while a trace is actually being built
+        from repro.serve.faults import KernelFault, fire as _fire_fault
 
-        interp = default_interpret() if interpret is None else interpret
-        qo = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32).reshape(-1),
-                              (B,))
-        kvl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1),
-                               (B,))
-        return paged_attention_pallas(q, k_pool, v_pool, block_table, qo,
-                                      kvl, causal=causal,
-                                      block_q=min(128, T),
-                                      interpret=interp)
+        kind = _fire_fault("kernel.paged_attention")
+        if kind == "compile_error":
+            raise KernelFault(
+                "injected paged-attention kernel compile failure")
+        if kind != "fallback":
+            from repro.kernels.ops import default_interpret
+
+            interp = default_interpret() if interpret is None else interpret
+            qo = jnp.broadcast_to(
+                jnp.asarray(q_offset, jnp.int32).reshape(-1), (B,))
+            kvl = jnp.broadcast_to(
+                jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,))
+            return paged_attention_pallas(q, k_pool, v_pool, block_table,
+                                          qo, kvl, causal=causal,
+                                          block_q=min(128, T),
+                                          interpret=interp)
     k = gather_kv_blocks(k_pool, block_table)
     v = gather_kv_blocks(v_pool, block_table)
     return attention(q, k, v, causal=causal, window=window,

@@ -1,7 +1,10 @@
 from repro.serve.continuous import (ContinuousConfig, ContinuousServingEngine,
                                     Request)
 from repro.serve.engine import ServeConfig, ServingEngine
+from repro.serve.faults import (EngineCrash, FaultInjector, FaultSpec,
+                                KernelFault)
 from repro.serve.paged import BlockPool
 
 __all__ = ["ServeConfig", "ServingEngine", "ContinuousConfig",
-           "ContinuousServingEngine", "Request", "BlockPool"]
+           "ContinuousServingEngine", "Request", "BlockPool",
+           "FaultInjector", "FaultSpec", "KernelFault", "EngineCrash"]

@@ -47,28 +47,38 @@ tile membership (see serve/README.md).
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
+import os
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policy import DENSE, SparsityPolicy
+from repro.serve import faults as fault_mod
 from repro.serve import slots as slot_ops
+from repro.serve.faults import EngineCrash, FaultInjector, KernelFault
 from repro.serve.paged import (BlockPool, chain_block_hashes,
-                               init_paged_cache, max_blocks_per_slot)
+                               chain_block_keys, init_paged_cache,
+                               max_blocks_per_slot)
 
 __all__ = ["ContinuousConfig", "Request", "ContinuousServingEngine"]
 
 WAITING, PREFILL, DECODE, DONE = "waiting", "prefill", "decode", "done"
 # terminal without ever running: admission proved the request can NEVER
-# fit the block pool (its replay sequence outgrew capacity) — rejecting it
-# keeps strict-FCFS admission from waiting on it forever and starving the
-# queue behind it (head-of-line livelock, ISSUE-5 bugfix)
+# fit the block pool (its replay sequence outgrew capacity), its transient-
+# failure retry budget ran out, or the no-progress watchdog evicted it —
+# rejecting keeps strict-FCFS admission from waiting on it forever and
+# starving the queue behind it (head-of-line livelock, ISSUE-5 bugfix)
 REJECTED = "rejected"
-_TERMINAL = (DONE, REJECTED)
+# deadline (submit ttl / cfg.ttl_default) passed before completion
+TIMED_OUT = "timed_out"
+# cancel(rid): caller withdrew the request; unwound from any phase
+CANCELLED = "cancelled"
+_TERMINAL = (DONE, REJECTED, TIMED_OUT, CANCELLED)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +106,29 @@ class ContinuousConfig:
     validate_pool: bool = False
     # audit block-pool/refcount/ownership invariants after every scheduler
     # iteration (O(num_blocks) host work) — test/debug instrumentation.
+    # Also forced on by REPRO_VALIDATE_POOL=1 (set by tests/conftest.py so
+    # the whole serving suite runs audited).
+    # --- request-lifecycle hardening (ISSUE 6) ---
+    ttl_default: Optional[int] = None
+    # default per-request deadline: arrival + ttl_default scheduler
+    # iterations (None = no deadline); submit(ttl=...) overrides per
+    # request.  Past it the request moves to terminal TIMED_OUT from any
+    # phase, its slot/blocks/prefix refs unwound.
+    admission_retries: int = 8
+    # transient admission failures (injected pool/admit faults, or a real
+    # allocation error) absorbed per request before the REJECTED backstop
+    retry_backoff: int = 2
+    # exponential-backoff base: after the k-th transient failure the
+    # request retries no earlier than it + min(retry_backoff**k, 64)
+    watchdog_iters: int = 64
+    # no-progress window: if admission-eligible requests exist but nothing
+    # advanced for this many iterations (possible only under persistent
+    # faults — clean scheduling always progresses), the watchdog force-
+    # rejects the oldest stuck request instead of livelocking to max_iters
+    snapshot_every: int = 0
+    # >0: keep ``last_snapshot`` refreshed every k iterations (taken at
+    # the top-of-iteration boundary) so a crashed engine can be rebuilt
+    # with restore() and resume token-identically.  0 = manual snapshots.
 
 
 @dataclasses.dataclass
@@ -125,6 +158,11 @@ class Request:
     done_iter: int = -1
     arrival_time: float = -1.0         # wall clock when arrival was reached
     done_time: float = 0.0             # wall-clock latency from arrival
+    # --- lifecycle hardening ---
+    deadline: Optional[int] = None     # absolute iteration bound (TIMED_OUT)
+    cancel_requested: bool = False     # processed at the next iteration start
+    retries: int = 0                   # transient admission failures absorbed
+    next_retry_iter: int = 0           # backoff window after a transient fail
 
 
 def _dyadic_sizes(length: int, cap: int) -> List[int]:
@@ -146,10 +184,22 @@ class ContinuousServingEngine:
     """Scheduler + paged slot cache + shape-bucketed jitted phases."""
 
     def __init__(self, model, policy: SparsityPolicy = DENSE,
-                 cfg: ContinuousConfig = ContinuousConfig()):
+                 cfg: ContinuousConfig = ContinuousConfig(),
+                 faults: Optional[FaultInjector] = None):
         self.model = model
         self.policy = policy
         self.cfg = cfg
+        # deterministic fault injection (serve/faults.py): consulted at the
+        # engine's own sites (admit/prefill/decode) and globally activated
+        # around run() for the pool + kernel-dispatch sites
+        self.faults = faults
+        # optional host-side hook called at the top of every scheduler
+        # iteration as hook(engine, it) — external control plane (the chaos
+        # harness drives cancel() through it; a server could drive
+        # monitoring or load shedding)
+        self.iteration_hook: Optional[Callable] = None
+        self._validate = (cfg.validate_pool
+                          or os.environ.get("REPRO_VALIDATE_POOL") == "1")
         mcfg = model.cfg
         if getattr(mcfg, "vision_stub", False):
             assert cfg.chunk_size >= mcfg.n_patches, (
@@ -193,6 +243,13 @@ class ContinuousServingEngine:
         self.preemptions = 0
         self.rejections = 0
         self.preempt_log: List[tuple] = []      # (rid, state-when-preempted)
+        # lifecycle-hardening counters
+        self.degraded_iterations = 0  # iterations re-run on the jnp oracle
+        self.admission_retries = 0    # transient admission failures absorbed
+        self.watchdog_trips = 0       # forced evictions by the watchdog
+        self.timeouts = 0
+        self.cancellations = 0
+        self.restores = 0             # times restore() rebuilt this engine
         # prefix caching needs every piece of continuation state to live in
         # the paged KV pool: archs with recurrent blocks carry scan state
         # that cached blocks cannot restore, so they stay cache-off even
@@ -225,9 +282,20 @@ class ContinuousServingEngine:
         self.cache = None                      # built lazily per params
         self.trace_counts: Dict[str, int] = {"prefill": 0, "decode": 0}
         self.metrics: Dict[str, Any] = {}
+        self._it = 0                           # scheduler-iteration clock
+        self._key = None                       # sampling PRNG (run-owned)
+        self._last_progress = 0                # watchdog bookkeeping
+        self.last_snapshot: Optional[Dict] = None
 
+        # every phase program takes a runtime ``fault`` operand added onto
+        # its logits (0.0 on clean runs, NaN when the injector fires a
+        # "nonfinite" fault — a runtime value, so injection never bakes
+        # into or retraces the compiled program) and returns an ``ok``
+        # finiteness verdict the degradation ladder checks host-side.
+        # ``ok`` also trips on GENUINE non-finite logits from a kernel bug.
         def make_prefill_fn(policy, count_key):
-            def prefill_fn(params, cache, slot, tokens, chunk_len, extras):
+            def prefill_fn(params, cache, slot, tokens, chunk_len, extras,
+                           fault):
                 # runs at trace time only
                 self.trace_counts[count_key] = \
                     self.trace_counts.get(count_key, 0) + 1
@@ -235,20 +303,31 @@ class ContinuousServingEngine:
                 batch = {"tokens": tokens, "chunk_len": chunk_len, **extras}
                 logits, sub = self.model.prefill_chunk(params, batch, sub,
                                                        policy=policy)
-                return logits[0], slot_ops.write_slot(cache, slot, sub,
-                                                      self._spec)
+                logits = logits[0] + fault
+                ok = jnp.all(jnp.isfinite(logits))
+                return logits, slot_ops.write_slot(cache, slot, sub,
+                                                   self._spec), ok
             return prefill_fn
 
         dense = DENSE.with_(use_pallas_kernels=policy.use_pallas_kernels)
 
-        def decode_fn(params, cache, tokens, active, key):
-            self.trace_counts["decode"] += 1
-            logits, new_cache = self.model.decode_step(
-                params, tokens[:, None], cache, policy=dense)
-            new_cache = slot_ops.where_active(active, new_cache, cache,
-                                              self._spec)
-            nxt = self._sample(logits, key)
-            return jnp.where(active, nxt, tokens), new_cache
+        def make_decode_fn(policy, count_key):
+            def decode_fn(params, cache, tokens, active, key, fault):
+                self.trace_counts[count_key] = \
+                    self.trace_counts.get(count_key, 0) + 1
+                logits, new_cache = self.model.decode_step(
+                    params, tokens[:, None], cache, policy=policy)
+                logits = logits + fault
+                new_cache = slot_ops.where_active(active, new_cache, cache,
+                                                  self._spec)
+                nxt = self._sample(logits, key)
+                # inactive slots may legitimately hold junk logits — only
+                # active rows gate the degradation ladder
+                ok = jnp.all(jnp.isfinite(logits)
+                             | ~active.reshape(active.shape[0],
+                                               *([1] * (logits.ndim - 1))))
+                return jnp.where(active, nxt, tokens), new_cache, ok
+            return decode_fn
 
         self._prefill_jit = jax.jit(make_prefill_fn(policy, "prefill"))
         # preemption replay re-ingests tokens the request already EMITTED;
@@ -260,7 +339,19 @@ class ContinuousServingEngine:
         # under a non-dense policy.
         self._prefill_replay_jit = jax.jit(
             make_prefill_fn(dense, "prefill_replay"))
-        self._decode_jit = jax.jit(decode_fn)
+        self._decode_jit = jax.jit(make_decode_fn(dense, "decode"))
+        # graceful-degradation ladder: bit-exact jnp oracle twins of every
+        # phase program (kernel dispatch forced off).  jax.jit is lazy, so
+        # none of these trace — and no "*_oracle" trace-count key appears —
+        # unless an iteration actually degrades.
+        opolicy = policy.with_(use_pallas_kernels=False) \
+            if policy.use_pallas_kernels else policy
+        self._prefill_oracle_jit = jax.jit(
+            make_prefill_fn(opolicy, "prefill_oracle"))
+        self._prefill_replay_oracle_jit = jax.jit(
+            make_prefill_fn(DENSE, "prefill_replay_oracle"))
+        self._decode_oracle_jit = jax.jit(
+            make_decode_fn(DENSE, "decode_oracle"))
 
     # ------------------------------------------------------------- sampling
     def _sample(self, logits, key):
@@ -270,11 +361,15 @@ class ContinuousServingEngine:
             key, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)
 
     # ------------------------------------------------------------ admission
-    def submit(self, tokens, max_new_tokens: int = 32, arrival: int = 0) -> int:
+    def submit(self, tokens, max_new_tokens: int = 32, arrival: int = 0,
+               ttl: Optional[int] = None) -> int:
         """Queue a request; returns its request id.
 
         ``arrival`` is the scheduler iteration at which the request becomes
-        visible (simulated asynchronous traffic)."""
+        visible (simulated asynchronous traffic).  ``ttl`` bounds its
+        lifetime: past ``arrival + ttl`` scheduler iterations the request
+        is moved to terminal ``TIMED_OUT`` from whatever phase it is in
+        (None → ``cfg.ttl_default``; both None → no deadline)."""
         tokens = np.asarray(tokens).reshape(-1).astype(np.int32)
         assert tokens.size > 0, "empty prompt"
         assert tokens.size + max_new_tokens <= self.cfg.max_seq, \
@@ -284,10 +379,85 @@ class ContinuousServingEngine:
                     <= self.pool.num_blocks), \
                 "request exceeds block pool capacity"
         rid = len(self.requests)
-        self.requests.append(Request(rid=rid, tokens=tokens,
-                                     max_new_tokens=max_new_tokens,
-                                     arrival=arrival))
+        if ttl is None:
+            ttl = self.cfg.ttl_default
+        self.requests.append(Request(
+            rid=rid, tokens=tokens, max_new_tokens=max_new_tokens,
+            arrival=arrival,
+            deadline=None if ttl is None else arrival + ttl))
         return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Withdraw a request from any lifecycle phase.  Processed at the
+        next iteration boundary (so a jitted phase never observes a
+        half-unwound slot): the request moves to terminal ``CANCELLED``
+        and its slot/blocks/prefix refs are released.  Returns False if
+        the request is unknown or already terminal."""
+        req = next((r for r in self.requests if r.rid == rid), None)
+        if req is None or req.state in _TERMINAL:
+            return False
+        req.cancel_requested = True
+        return True
+
+    # ---------------------------------------------------- lifecycle plumbing
+    def _fire(self, site: str) -> Optional[str]:
+        return self.faults.fire(site) if self.faults is not None else None
+
+    def _evict_request(self, req: Request, state: str, it: int) -> None:
+        """Move ``req`` to terminal ``state`` from ANY lifecycle phase,
+        unwinding whatever it holds.  Full blocks are registered before
+        release — their rows are final KV, so the prefix index keeps them
+        (a re-submitted prompt still hits); the partially-written frontier
+        block is released unregistered, so no writable block is ever
+        published (audited by ``_audit_pool``)."""
+        if req.state in (PREFILL, DECODE):
+            if self.paged and req.blocks:
+                self._register_blocks(req)
+                self.pool.release(req.blocks[::-1])   # chain head → MRU end
+                req.blocks = []
+                req.shared = req.registered = 0
+            if req.slot >= 0:
+                if self.paged:
+                    self._host_table[req.slot, :] = -1
+                    self._table_dirty = True
+                self._free_slots.append(req.slot)
+                self._slot_req[req.slot] = None
+                req.slot = -1
+        req.state = state
+        req.done_iter = it
+        req.filled = 0
+        req.kv_len = 0
+
+    def _retry(self, req: Request, it: int) -> None:
+        """Absorb a transient admission failure: exponential backoff, then
+        the REJECTED backstop once the per-request retry budget is spent
+        (an unbounded retry of a persistent fault would livelock strict-
+        FCFS admission)."""
+        req.retries += 1
+        self.admission_retries += 1
+        if req.retries > self.cfg.admission_retries:
+            self._evict_request(req, REJECTED, it)
+            self.rejections += 1
+        else:
+            req.next_retry_iter = it + min(
+                self.cfg.retry_backoff ** req.retries, 64)
+
+    def _reap(self, it: int) -> int:
+        """Process cancellations and deadlines at the iteration boundary;
+        returns how many requests reached a terminal state."""
+        n = 0
+        for r in self.requests:
+            if r.state in _TERMINAL:
+                continue
+            if r.cancel_requested:
+                self._evict_request(r, CANCELLED, it)
+                self.cancellations += 1
+                n += 1
+            elif r.deadline is not None and it >= r.deadline:
+                self._evict_request(r, TIMED_OUT, it)
+                self.timeouts += 1
+                n += 1
+        return n
 
     def _seq(self, req: Request) -> np.ndarray:
         """Tokens to prefill: the prompt, plus — after a preemption — the
@@ -323,15 +493,23 @@ class ContinuousServingEngine:
         n_full = (len(seq) - 1) // self.pool.block_size
         if n_full == 0:
             return []
-        return self.pool.match(self._chain_for(req, seq, n_full))
+        dense_from = len(req.tokens) if self.policy.enabled else None
+        return self.pool.match(
+            self._chain_for(req, seq, n_full),
+            keys=chain_block_keys(seq, self.pool.block_size, n_full,
+                                  dense_from))
 
-    def _admit(self, it: int) -> None:
+    def _admit(self, it: int) -> int:
         # FCFS by arrival, not submission order: requests may be submitted
         # with out-of-order arrival times (and preempted requests requeue
-        # with their original arrival)
+        # with their original arrival).  Returns how many requests changed
+        # state (admitted or rejected) — the watchdog's progress signal.
+        moved = 0
         for req in sorted(self.requests, key=lambda r: (r.arrival, r.rid)):
             if req.state != WAITING or req.arrival > it:
                 continue
+            if req.next_retry_iter > it:
+                continue               # backing off a transient failure
             if self.paged:
                 seq = self._seq(req)
                 need = self.pool.blocks_for(len(seq))
@@ -346,12 +524,17 @@ class ContinuousServingEngine:
                     # drift (out-of-band enqueues, future scheduler
                     # changes shrinking the pool) into a visible REJECTED
                     # request instead of a silent queue stall
-                    req.state = REJECTED
-                    req.done_iter = it
+                    self._evict_request(req, REJECTED, it)
                     self.rejections += 1
+                    moved += 1
                     continue
             if not self._free_slots:
                 break
+            if self._fire("admit") == "transient":
+                # injected transient admission failure (e.g. a control-
+                # plane hiccup): backoff-and-retry before the backstop
+                self._retry(req, it)
+                continue
             skip = 0
             if self.paged:
                 shared = self._match_prefix(req, seq)
@@ -366,9 +549,21 @@ class ContinuousServingEngine:
                     # skipping ahead would starve long prompts under
                     # sustained short-prompt traffic
                     break
-                for b in shared:
-                    self.pool.acquire_cached(b)
-                req.blocks = shared + self.pool.alloc(need - len(shared))
+                acquired: List[int] = []
+                try:
+                    for b in shared:
+                        self.pool.acquire_cached(b)
+                        acquired.append(b)
+                    fresh = self.pool.alloc(need - len(shared))
+                except RuntimeError:
+                    # allocation failed mid-admission (injected pool fault,
+                    # or capacity raced away): roll back the prefix refs
+                    # just acquired — the pool is left exactly as found —
+                    # and retry with backoff
+                    self.pool.release(acquired[::-1])
+                    self._retry(req, it)
+                    continue
+                req.blocks = shared + fresh
                 req.shared = req.registered = len(shared)
                 skip = len(shared) * self.pool.block_size
                 req.cached_tokens += skip
@@ -393,6 +588,8 @@ class ContinuousServingEngine:
             req.filled = req.kv_len = skip
             req.admitted_iter = it
             self._slot_req[slot] = req
+            moved += 1
+        return moved
 
     def _register_blocks(self, req: Request) -> None:
         """Publish the request's full blocks in the prefix index.  KV rows
@@ -408,9 +605,12 @@ class ContinuousServingEngine:
         n_full = min(req.kv_len // bs, len(req.blocks))
         if n_full <= req.registered:
             return
-        hashes = self._chain_for(req, self._seq(req)[:req.kv_len], n_full)
+        seq = self._seq(req)[:req.kv_len]
+        hashes = self._chain_for(req, seq, n_full)
+        dense_from = len(req.tokens) if self.policy.enabled else None
+        keys = chain_block_keys(seq, bs, n_full, dense_from)
         for i in range(req.registered, n_full):
-            self.pool.register(req.blocks[i], hashes[i])
+            self.pool.register(req.blocks[i], hashes[i], key=keys[i])
         req.registered = n_full
 
     def _preempt(self, req: Request) -> None:
@@ -451,8 +651,13 @@ class ContinuousServingEngine:
                 need = self.pool.blocks_for(r.kv_len + 1)
                 if len(r.blocks) >= need:
                     break
+                blk = None
                 if self.pool.available:
-                    blk = self.pool.alloc(1)
+                    try:
+                        blk = self.pool.alloc(1)
+                    except RuntimeError:
+                        blk = None   # injected exhaustion → preempt path
+                if blk is not None:
                     self._host_table[r.slot, len(r.blocks)] = blk[0]
                     r.blocks.extend(blk)
                     self._table_dirty = True
@@ -476,6 +681,7 @@ class ContinuousServingEngine:
             self._table_dirty = True
         self._free_slots.append(req.slot)
         self._slot_req[req.slot] = None
+        req.slot = -1
 
     def clear(self) -> None:
         """Drop completed requests (e.g. after a warmup pass) so a fresh
@@ -488,6 +694,9 @@ class ContinuousServingEngine:
         # rids restart at 0 for the next stream: stale modality-extras
         # exclusions must not leak onto unrelated rid-colliding requests
         self._extra_rids = set()
+        self._it = 0
+        self._key = None
+        self._last_progress = 0
 
     # ---------------------------------------------------------- auditing
     def _audit_pool(self) -> None:
@@ -553,10 +762,30 @@ class ContinuousServingEngine:
         tokens, clen, first, replay = self._next_chunk(req)
         ex = extras if first else {}
         self._sync_table()
+        kind = self._fire("prefill")
+        if kind == "crash":
+            raise EngineCrash(f"injected crash in prefill (it={it})")
+        fault = jnp.float32(np.nan if kind == "nonfinite" else 0.0)
         fn = self._prefill_replay_jit if replay else self._prefill_jit
-        logits, self.cache = fn(
-            params, self.cache, jnp.asarray(req.slot, jnp.int32),
-            jnp.asarray(tokens), jnp.asarray(clen, jnp.int32), ex)
+        args = (params, self.cache, jnp.asarray(req.slot, jnp.int32),
+                jnp.asarray(tokens), jnp.asarray(clen, jnp.int32), ex)
+        try:
+            logits, new_cache, ok = fn(*args, fault)
+            ok = bool(ok)
+        except KernelFault:
+            # kernel compile/lowering failure at trace time: the failed
+            # trace aborted before any output existed (and was not cached)
+            ok = False
+        if not ok:
+            # degradation ladder: discard the faulted outputs (functional
+            # jit — self.cache is untouched) and re-run the SAME operands
+            # on the bit-exact jnp oracle program
+            self.degraded_iterations += 1
+            ofn = (self._prefill_replay_oracle_jit if replay
+                   else self._prefill_oracle_jit)
+            logits, new_cache, ok = ofn(*args, jnp.float32(0.0))
+            assert bool(ok), "oracle prefill produced non-finite logits"
+        self.cache = new_cache
         req.filled += clen
         req.kv_len += clen
         # publish blocks the chunk just completed: a request admitted
@@ -579,8 +808,25 @@ class ContinuousServingEngine:
         for r in decoding:
             toks[r.slot], act[r.slot] = r.cur, True
         self._sync_table()
-        nxt, self.cache = self._decode_jit(
-            params, self.cache, jnp.asarray(toks), jnp.asarray(act), key)
+        kind = self._fire("decode")
+        if kind == "crash":
+            raise EngineCrash(f"injected crash in decode (it={it})")
+        fault = jnp.float32(np.nan if kind == "nonfinite" else 0.0)
+        args = (params, self.cache, jnp.asarray(toks), jnp.asarray(act), key)
+        try:
+            nxt, new_cache, ok = self._decode_jit(*args, fault)
+            ok = bool(ok)
+        except KernelFault:
+            ok = False
+        if not ok:
+            # same degradation ladder as prefill (argmax over NaN logits
+            # silently yields token 0, so tokens alone cannot reveal the
+            # fault — the program's ``ok`` verdict gates instead)
+            self.degraded_iterations += 1
+            nxt, new_cache, ok = self._decode_oracle_jit(
+                *args, jnp.float32(0.0))
+            assert bool(ok), "oracle decode produced non-finite logits"
+        self.cache = new_cache
         nxt = np.asarray(nxt)
         for r in decoding:
             r.kv_len += 1
@@ -608,37 +854,78 @@ class ContinuousServingEngine:
                 self.cache = slot_ops.init_slot_cache(
                     self.model, self.cfg.num_slots, self.cfg.max_seq)
         self._extra_rids |= set(extras)
-        key = jax.random.PRNGKey(self.cfg.seed)
+        if self._key is None:   # survives across run() calls and restore()
+            self._key = jax.random.PRNGKey(self.cfg.seed)
         t0 = time.perf_counter()
+        it0 = self._it
         preempt0, reject0 = self.preemptions, self.rejections
         hits0, reused0 = self.prefix_hits, self.blocks_reused
         skipped0, demand0 = self.tokens_skipped, self.prefill_demand
+        degraded0, retries0 = self.degraded_iterations, self.admission_retries
+        wdog0, timeout0 = self.watchdog_trips, self.timeouts
+        cancel0 = self.cancellations
         if self.paged:
             self.pool.peak_in_use = self.pool.in_use   # per-run peak
             evict0 = self.pool.evictions
-        it = 0
-        while any(r.state not in _TERMINAL for r in self.requests):
-            assert it < self.cfg.max_iters, "scheduler stuck"
-            now = time.perf_counter()
-            for r in self.requests:      # anchor wall-clock latency at arrival
-                if r.state == WAITING and r.arrival <= it and r.arrival_time < 0:
-                    r.arrival_time = now
-            self._admit(it)
-            prefilling = [r for r in self.requests if r.state == PREFILL]
-            if prefilling:
-                key, sub = jax.random.split(key)
-                req = prefilling[0]
-                self._prefill_one(params, req, extras.get(req.rid, {}),
-                                  it, t0, sub)
-            if self.paged:
-                self._ensure_decode_blocks()
-            decoding = [r for r in self.requests if r.state == DECODE]
-            if decoding:
-                key, sub = jax.random.split(key)
-                self._decode_all(params, decoding, it, t0, sub)
-            if self.paged and self.cfg.validate_pool:
-                self._audit_pool()
-            it += 1
+        # the kernel-dispatch fault sites (core/pruner, models/attention)
+        # cannot see this engine — activate the injector globally for the
+        # duration of the loop (EngineCrash still deactivates cleanly)
+        fault_mod.activate(self.faults)
+        try:
+            while any(r.state not in _TERMINAL for r in self.requests):
+                it = self._it
+                assert it - it0 < self.cfg.max_iters, "scheduler stuck"
+                if self.faults is not None:
+                    self.faults.tick(it)
+                if self.iteration_hook is not None:
+                    self.iteration_hook(self, it)
+                if (self.cfg.snapshot_every
+                        and it % self.cfg.snapshot_every == 0):
+                    # iteration boundary = consistent state: a crash later
+                    # this iteration rewinds here via restore()
+                    self.last_snapshot = self.snapshot()
+                now = time.perf_counter()
+                for r in self.requests:  # anchor wall-clock latency at arrival
+                    if (r.state == WAITING and r.arrival <= it
+                            and r.arrival_time < 0):
+                        r.arrival_time = now
+                reaped = self._reap(it)
+                admitted = self._admit(it)
+                prefilling = [r for r in self.requests if r.state == PREFILL]
+                if prefilling:
+                    self._key, sub = jax.random.split(self._key)
+                    req = prefilling[0]
+                    self._prefill_one(params, req, extras.get(req.rid, {}),
+                                      it, t0, sub)
+                if self.paged:
+                    self._ensure_decode_blocks()
+                decoding = [r for r in self.requests if r.state == DECODE]
+                if decoding:
+                    self._key, sub = jax.random.split(self._key)
+                    self._decode_all(params, decoding, it, t0, sub)
+                if self.paged and self._validate:
+                    self._audit_pool()
+                # no-progress watchdog: clean scheduling always advances
+                # (prefill/decode run every iteration something is active),
+                # so a stall with admission-eligible waiters only arises
+                # under persistent faults — force-reject the oldest stuck
+                # request instead of livelocking until max_iters
+                progressed = bool(reaped or admitted or prefilling
+                                  or decoding)
+                pending = [r for r in self.requests
+                           if r.state == WAITING and r.arrival <= it]
+                if progressed or not pending:
+                    self._last_progress = it
+                elif it - self._last_progress >= self.cfg.watchdog_iters:
+                    stuck = min(pending, key=lambda r: (r.arrival, r.rid))
+                    self._evict_request(stuck, REJECTED, it)
+                    self.rejections += 1
+                    self.watchdog_trips += 1
+                    self._last_progress = it
+                self._it += 1
+        finally:
+            fault_mod.deactivate()
+        it = self._it - it0
         wall = time.perf_counter() - t0
         gen = sum(len(r.out) for r in self.requests)
         self.metrics = {
@@ -647,6 +934,19 @@ class ContinuousServingEngine:
             "generated_tokens": gen,
             "tokens_per_s": gen / max(wall, 1e-9),
             "trace_counts": dict(self.trace_counts),
+            "degraded_iterations": self.degraded_iterations - degraded0,
+            "lifecycle": {
+                "terminal_states": {
+                    s: sum(1 for r in self.requests if r.state == s)
+                    for s in _TERMINAL},
+                "admission_retries": self.admission_retries - retries0,
+                "watchdog_trips": self.watchdog_trips - wdog0,
+                "timeouts": self.timeouts - timeout0,
+                "cancellations": self.cancellations - cancel0,
+                "restores": self.restores,
+                "faults_fired": (self.faults.total_fired
+                                 if self.faults is not None else 0),
+            },
             "paged": ({
                 "enabled": True,
                 "block_size": self.pool.block_size,
@@ -676,9 +976,85 @@ class ContinuousServingEngine:
                 "n_out": len(r.out),
                 "preemptions": r.preempted,
                 "cached_tokens": r.cached_tokens,
+                "retries": r.retries,
+                "deadline": r.deadline,
             } for r in self.requests],
         }
         return {
             "outputs": {r.rid: list(r.out) for r in self.requests},
             "metrics": self.metrics,
         }
+
+    # ------------------------------------------------------ crash recovery
+    def snapshot(self) -> Dict[str, Any]:
+        """Copy of all host-side engine state at an iteration boundary:
+        request lifecycles (including emitted tokens and memoized hash
+        chains), slot assignment, the block pool (tables, refcounts,
+        prefix index, LRU order), the iteration clock, and the sampling
+        PRNG.  Process-local — chain hashes use Python's per-process
+        salted ``hash()``, so a snapshot only restores into the same
+        process (matching its purpose: surviving an ENGINE crash, not a
+        process crash)."""
+        return {
+            "it": self._it,
+            "key": None if self._key is None else np.asarray(self._key),
+            "requests": copy.deepcopy(self.requests),
+            "slot_rids": [None if r is None else r.rid
+                          for r in self._slot_req],
+            "free_slots": list(self._free_slots),
+            "extra_rids": set(self._extra_rids),
+            "pool": self.pool.snapshot() if self.paged else None,
+            "host_table": (self._host_table.copy() if self.paged else None),
+            "counters": {
+                "preemptions": self.preemptions,
+                "rejections": self.rejections,
+                "degraded_iterations": self.degraded_iterations,
+                "admission_retries": self.admission_retries,
+                "watchdog_trips": self.watchdog_trips,
+                "timeouts": self.timeouts,
+                "cancellations": self.cancellations,
+                "restores": self.restores,
+                "prefix_hits": self.prefix_hits,
+                "blocks_reused": self.blocks_reused,
+                "tokens_skipped": self.tokens_skipped,
+                "prefill_demand": self.prefill_demand,
+            },
+        }
+
+    def restore(self, snap: Dict[str, Any]) -> None:
+        """Rebuild host-side state from a :meth:`snapshot` taken in this
+        process (possibly by a different, now-dead engine instance over
+        the same model/config).  Device KV is treated as LOST — the crash
+        that motivated the restore invalidates it — so in-flight requests
+        are demoted to ``WAITING`` with a fresh block pool and empty
+        prefix index, and replay through prefill on re-admission: the
+        same recompute path preemption uses, so resumed greedy outputs
+        are token-identical to an undisturbed run."""
+        cfg = self.cfg
+        self._it = snap["it"]
+        self._key = (None if snap["key"] is None
+                     else jnp.asarray(snap["key"]))
+        self._last_progress = self._it     # fresh watchdog grace period
+        self.requests = copy.deepcopy(snap["requests"])
+        self._extra_rids = set(snap["extra_rids"])
+        self._free_slots = list(range(cfg.num_slots))
+        self._slot_req = [None] * cfg.num_slots
+        self.cache = None                  # rebuilt lazily by run()
+        for r in self.requests:
+            if r.state in (PREFILL, DECODE):
+                r.state = WAITING
+                r.slot = -1
+                r.blocks = []
+                r.shared = r.registered = 0
+                r.filled = 0
+                r.kv_len = 0
+        if self.paged:
+            self.pool = BlockPool(snap["pool"]["num_blocks"],
+                                  cfg.block_size,
+                                  prefix_cache=self.prefix_cache)
+            self._host_table = np.full((cfg.num_slots, self._max_blocks),
+                                       -1, np.int32)
+            self._table_dirty = True
+        for name, val in snap["counters"].items():
+            setattr(self, name, val)
+        self.restores += 1

@@ -1,0 +1,208 @@
+"""Deterministic fault injection for the continuous serving engine.
+
+A :class:`FaultInjector` is a seeded, replayable source of simulated
+failures that the serving stack consults at **named injection sites**:
+
+  ==========================  ==================================================
+  site                        registered at / kinds
+  ==========================  ==================================================
+  ``pool.alloc``              :meth:`repro.serve.paged.BlockPool.alloc` —
+                              ``"exhausted"`` raises the pool's real
+                              exhaustion ``RuntimeError`` (exercising every
+                              caller's recovery path), ``"evict_storm"``
+                              flushes the whole zero-ref prefix LRU before
+                              allocating (prefix-cache pressure).
+  ``admit``                   ``ContinuousServingEngine._admit`` — a
+                              ``"transient"`` admission failure; the engine
+                              retries with bounded exponential backoff before
+                              its ``REJECTED`` backstop.
+  ``prefill`` / ``decode``    the engine's jitted phases — ``"nonfinite"``
+                              feeds a runtime NaN operand into the program's
+                              logits (detected by the degradation ladder and
+                              re-run on the jnp oracle), ``"crash"`` raises
+                              :class:`EngineCrash` mid-iteration (recovered
+                              via ``snapshot()/restore()``).
+  ``kernel.projection``       ``repro.core.pruner.sparse_matmul`` dispatch —
+                              ``"compile_error"`` raises :class:`KernelFault`
+                              at trace time (simulated Mosaic lowering
+                              failure), ``"fallback"`` silently takes the jnp
+                              oracle branch of the dispatch ladder.
+  ``kernel.paged_attention``  ``repro.models.attention.paged_attention``
+                              dispatch — same kinds as above.
+  ==========================  ==================================================
+
+Determinism/replay: a schedule is a list of :class:`FaultSpec` entries,
+each firing at explicit engine ``iters``, at the n-th ``calls`` of its
+site, or with probability ``p`` from a per-spec ``numpy`` generator
+derived from the injector seed.  The same ``(seed, schedule)`` against the
+same request stream reproduces the identical fault sequence; the
+``fired`` log (and :meth:`FaultInjector.to_json`) records exactly what
+fired where, so a CI failure's schedule replays locally.
+
+This module is intentionally dependency-free (stdlib + numpy only): the
+kernel-dispatch sites live in ``repro.core`` / ``repro.models``, which
+import it lazily without dragging the serving stack in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import Counter
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["FaultSpec", "FaultInjector", "KernelFault", "EngineCrash",
+           "SITES", "activate", "deactivate", "active", "fire"]
+
+SITES: Tuple[str, ...] = (
+    "pool.alloc",
+    "admit",
+    "prefill",
+    "decode",
+    "kernel.projection",
+    "kernel.paged_attention",
+)
+
+
+class KernelFault(RuntimeError):
+    """Simulated kernel compile/lowering failure at a dispatch site.
+
+    Raised at *trace* time (Python-level dispatch inside ``jax.jit``), so
+    the failed trace aborts cleanly, no cache state mutates (the jitted
+    phases are functional), and the engine's degradation ladder re-runs
+    the iteration on the bit-exact jnp oracle program."""
+
+
+class EngineCrash(RuntimeError):
+    """Simulated hard mid-iteration crash of the serving engine."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault.  Exactly one trigger should be set:
+
+    * ``iters`` — fire on every consult of ``site`` during those engine
+      iterations (an iteration-long storm at a multi-consult site);
+    * ``calls`` — fire on the n-th consult of ``site`` (0-based, counted
+      over the injector's lifetime);
+    * ``p``     — fire each consult with probability ``p`` (deterministic
+      given the injector seed and consult order).
+
+    ``limit`` caps total fires of this spec (``None`` = unbounded)."""
+    site: str
+    kind: str
+    iters: Optional[Sequence[int]] = None
+    calls: Optional[Sequence[int]] = None
+    p: float = 0.0
+    limit: Optional[int] = None
+
+    def __post_init__(self):
+        assert self.site in SITES, f"unknown fault site {self.site!r}"
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        return {k: (list(v) if isinstance(v, (tuple, list)) else v)
+                for k, v in d.items() if v not in (None, 0.0)}
+
+
+class FaultInjector:
+    """Seeded, schedule-driven fault source (see module docstring).
+
+    The engine calls :meth:`tick` at the top of every scheduler iteration
+    and each instrumented site calls :meth:`fire`; the first matching
+    spec wins and its ``kind`` is returned (``None`` = no fault)."""
+
+    def __init__(self, seed: int = 0,
+                 schedule: Sequence[Any] = ()):
+        self.seed = int(seed)
+        self.schedule: List[FaultSpec] = [
+            s if isinstance(s, FaultSpec) else FaultSpec(**s)
+            for s in schedule]
+        # independent per-spec generators: adding a spec never perturbs
+        # the draws of the others (schedules compose reproducibly)
+        self._rng = [np.random.default_rng(self.seed * 1_000_003 + i)
+                     for i in range(len(self.schedule))]
+        self.it = -1                      # last ticked engine iteration
+        self._site_calls: Counter = Counter()
+        self._spec_fires: Counter = Counter()
+        self.fired: List[Dict[str, Any]] = []
+
+    # ------------------------------------------------------------- driving
+    def tick(self, it: int) -> None:
+        """Advance to engine iteration ``it`` (engine calls this once per
+        scheduler iteration, before any site is consulted)."""
+        self.it = it
+
+    def fire(self, site: str) -> Optional[str]:
+        """Consult ``site``: returns the fault kind to inject, or None."""
+        n = self._site_calls[site]
+        self._site_calls[site] = n + 1
+        for idx, spec in enumerate(self.schedule):
+            if spec.site != site:
+                continue
+            if spec.limit is not None and self._spec_fires[idx] >= spec.limit:
+                continue
+            if spec.iters is not None:
+                hit = self.it in spec.iters
+            elif spec.calls is not None:
+                hit = n in spec.calls
+            else:
+                hit = spec.p > 0.0 and self._rng[idx].random() < spec.p
+            if hit:
+                self._spec_fires[idx] += 1
+                self.fired.append({"it": self.it, "site": site,
+                                   "kind": spec.kind, "call": n})
+                return spec.kind
+        return None
+
+    @property
+    def total_fired(self) -> int:
+        return len(self.fired)
+
+    def fired_kinds(self, site: Optional[str] = None) -> List[str]:
+        return [f["kind"] for f in self.fired
+                if site is None or f["site"] == site]
+
+    # -------------------------------------------------------------- replay
+    def to_json(self) -> str:
+        """Serialize ``(seed, schedule)`` + the fired log — enough to
+        replay the scenario locally (CI uploads this on chaos failures)."""
+        return json.dumps({
+            "seed": self.seed,
+            "schedule": [s.to_dict() for s in self.schedule],
+            "fired": self.fired,
+        }, indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "FaultInjector":
+        d = json.loads(text)
+        return cls(seed=d.get("seed", 0), schedule=d.get("schedule", ()))
+
+
+# --------------------------------------------------------------- global hook
+# Kernel-dispatch sites (core/pruner.py, models/attention.py) cannot see
+# the engine instance — the engine activates its injector here for the
+# duration of run(), and the sites consult the module-level hook.  The
+# fast path (no injector active) is a single global read.
+
+_ACTIVE: Optional[FaultInjector] = None
+
+
+def activate(injector: Optional[FaultInjector]) -> None:
+    global _ACTIVE
+    _ACTIVE = injector
+
+
+def deactivate() -> None:
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def active() -> Optional[FaultInjector]:
+    return _ACTIVE
+
+
+def fire(site: str) -> Optional[str]:
+    """Consult the globally-active injector (None when inactive)."""
+    return _ACTIVE.fire(site) if _ACTIVE is not None else None

@@ -44,16 +44,17 @@ fresh exclusively-owned allocation, so no shared block is ever writable.
 from __future__ import annotations
 
 from collections import Counter, OrderedDict, deque
-from typing import Any, Deque, Dict, List, Optional, Sequence
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.faults import fire as _fire_fault
 from repro.serve.slots import slot_axis
 
-__all__ = ["BlockPool", "chain_block_hashes", "init_paged_cache",
-           "max_blocks_per_slot"]
+__all__ = ["BlockPool", "chain_block_hashes", "chain_block_keys",
+           "init_paged_cache", "max_blocks_per_slot"]
 
 _HASH_SEED = 0x9E3779B9
 
@@ -89,6 +90,13 @@ def chain_block_hashes(tokens, block_size: int,
     be the hash of block ``start - 1`` (``None`` = the seed, for
     ``start == 0``) — callers that hash as a sequence grows memoize their
     chain and pay only for the new blocks.
+
+    The block length is folded into the chain seed: the same token stream
+    hashed at a different ``block_size`` lands in a disjoint hash space
+    (blocks of different geometry must never alias).  Hashes remain
+    *probabilistic* identifiers — :meth:`BlockPool.match` additionally
+    verifies stored token content (see :func:`chain_block_keys`) so a
+    hash collision can never cause false sharing.
     """
     tokens = np.ascontiguousarray(np.asarray(tokens, np.int32))
     if n_blocks is None:
@@ -96,13 +104,38 @@ def chain_block_hashes(tokens, block_size: int,
     assert n_blocks * block_size <= len(tokens), \
         "chain hashes cover full blocks only"
     assert (h0 is None) == (start == 0), "h0 must accompany a resume point"
-    h = _HASH_SEED if h0 is None else h0
+    h = hash((_HASH_SEED, block_size)) if h0 is None else h0
     out: List[int] = []
     for i in range(start, n_blocks):
         lo, hi = i * block_size, (i + 1) * block_size
         dense = 0 if dense_from is None else max(0, hi - max(dense_from, lo))
         h = hash((h, dense, tokens[lo:hi].tobytes()))
         out.append(h)
+    return out
+
+
+def chain_block_keys(tokens, block_size: int,
+                     n_blocks: Optional[int] = None,
+                     dense_from: Optional[int] = None) -> List[Tuple]:
+    """Verification keys ``(dense_rows, token_bytes)`` per full block.
+
+    A chain hash is a probabilistic address; the key is the ground truth
+    it stands for.  :meth:`BlockPool.register` stores the key alongside
+    the hash and :meth:`BlockPool.match` compares keys block-by-block, so
+    a hash collision between different contents is *detected* (counted in
+    ``hash_collisions``) instead of silently sharing the wrong KV.
+    Verification is inductive: block ``i`` only matches after blocks
+    ``0..i-1`` matched with verified keys, so equal per-block keys along
+    the chain imply the whole prefix (and its sparse/dense row split) is
+    identical."""
+    tokens = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    if n_blocks is None:
+        n_blocks = len(tokens) // block_size
+    out: List[Tuple] = []
+    for i in range(n_blocks):
+        lo, hi = i * block_size, (i + 1) * block_size
+        dense = 0 if dense_from is None else max(0, hi - max(dense_from, lo))
+        out.append((dense, tokens[lo:hi].tobytes()))
     return out
 
 
@@ -140,9 +173,13 @@ class BlockPool:
         self._cached: "OrderedDict[int, int]" = OrderedDict()
         self._index: Dict[int, int] = {}         # chain hash → block id
         self._hash_of: Dict[int, int] = {}       # block id → chain hash
+        # block id → verification key (chain_block_keys): the content the
+        # hash stands for, compared on match to refuse collision aliasing
+        self._key_of: Dict[int, Tuple] = {}
         self.peak_in_use = 0
         self.total_allocs = 0                    # fresh allocations only
         self.evictions = 0
+        self.hash_collisions = 0                 # matches refused on key skew
 
     # ------------------------------------------------------------ queries
     @property
@@ -185,7 +222,19 @@ class BlockPool:
         even eviction cannot cover the request — callers check
         :attr:`available` and preempt first.  All validation happens
         before any state is mutated.
+
+        Fault-injection site ``pool.alloc`` (serve/faults.py):
+        ``"exhausted"`` raises the real exhaustion error so callers'
+        recovery paths (admission retry/backoff, decode-growth preemption)
+        are exercised; ``"evict_storm"`` flushes the zero-ref LRU first.
         """
+        kind = _fire_fault("pool.alloc")
+        if kind == "exhausted":
+            raise RuntimeError(
+                f"block pool exhausted (injected fault): want {n}, have "
+                f"{self.available}")
+        if kind == "evict_storm":
+            self.flush_cached()
         if n > self.available:
             raise RuntimeError(
                 f"block pool exhausted: want {n}, have {self.available} "
@@ -207,6 +256,7 @@ class BlockPool:
             if self._index.get(h) == i:
                 del self._index[h]
             self._hash_of.pop(i, None)
+            self._key_of.pop(i, None)
             self.evictions += 1
         ids = cand + evict
         for i in ids:
@@ -245,14 +295,40 @@ class BlockPool:
                     self._cached[i] = h          # MRU end of the LRU
                 else:
                     self._hash_of.pop(i, None)
+                    self._key_of.pop(i, None)
                     self._free.append(i)
 
+    def flush_cached(self) -> int:
+        """Evict EVERY zero-ref cached block (index entries dropped, blocks
+        freed).  Returns the number evicted.  Used by the ``evict_storm``
+        fault and by engine restore after a crash (device KV is gone, so a
+        surviving index would advertise garbage blocks)."""
+        n = len(self._cached)
+        for b, h in self._cached.items():
+            if self._index.get(h) == b:
+                del self._index[h]
+            self._hash_of.pop(b, None)
+            self._key_of.pop(b, None)
+            self._free.append(b)
+            self.evictions += 1
+        self._cached.clear()
+        return n
+
     # ------------------------------------------------------- prefix index
-    def register(self, block_id: int, chain_hash: int) -> bool:
+    def register(self, block_id: int, chain_hash: int,
+                 key: Optional[Tuple] = None) -> bool:
         """Publish a FULL block under its chain hash.  Returns False when
         the hash is already indexed (first copy wins — the duplicate block
         simply stays unregistered and frees normally) or when prefix
-        caching is off."""
+        caching is off.
+
+        ``key`` is the block's verification key (:func:`chain_block_keys`)
+        — the actual content the hash addresses.  :meth:`match` compares
+        it so a hash collision between different token contents is
+        refused instead of silently sharing the wrong KV.  ``None``
+        registers hash-only (legacy/debug posture: collisions under
+        Python's 64-bit tuple hash are ~2^-64 per pair, but a production
+        index must not bet correctness on that)."""
         if not self.prefix_cache:
             return False
         assert block_id in self._ref, "register of a block nobody owns"
@@ -263,16 +339,30 @@ class BlockPool:
             f"block {block_id} re-registered under a different hash"
         self._hash_of[block_id] = chain_hash
         self._index[chain_hash] = block_id
+        if key is not None:
+            self._key_of[block_id] = key
         return True
 
-    def match(self, chain_hashes: Sequence[int]) -> List[int]:
+    def match(self, chain_hashes: Sequence[int],
+              keys: Optional[Sequence[Tuple]] = None) -> List[int]:
         """Longest indexed prefix of a hash chain → block ids (not yet
-        acquired; callers :meth:`acquire_cached` each hit)."""
+        acquired; callers :meth:`acquire_cached` each hit).
+
+        With ``keys`` (aligned with ``chain_hashes``), every hash hit is
+        verified against the registered block's stored content key; a
+        mismatch — a genuine hash collision — stops the match there and
+        increments ``hash_collisions``.  A block registered without a key
+        matches hash-only."""
         ids: List[int] = []
-        for h in chain_hashes:
+        for i, h in enumerate(chain_hashes):
             b = self._index.get(h)
             if b is None:
                 break
+            if keys is not None:
+                stored = self._key_of.get(b)
+                if stored is not None and stored != keys[i]:
+                    self.hash_collisions += 1
+                    break
             ids.append(b)
         return ids
 
@@ -290,11 +380,54 @@ class BlockPool:
         assert all(c >= 1 for c in self._ref.values()), "zero-ref in _ref"
         assert set(self._index.values()) == set(self._hash_of), \
             "index/registration skew"
+        assert set(self._key_of) <= set(self._hash_of), \
+            "verification key for an unregistered block"
         for h, b in self._index.items():
             assert self._hash_of.get(b) == h, f"hash mismatch on block {b}"
             assert b in cached or b in ref, f"indexed block {b} is free"
         for b, h in self._cached.items():
             assert self._index.get(h) == b, f"cached block {b} unreachable"
+
+    # ------------------------------------------------------ snapshot/restore
+    def snapshot(self) -> Dict[str, Any]:
+        """Copy of the full host-side pool state (free list order, refcounts,
+        prefix index, zero-ref LRU order, counters).  Process-local: chain
+        hashes use Python's per-process salted ``hash``."""
+        return {
+            "num_blocks": self.num_blocks,
+            "block_size": self.block_size,
+            "prefix_cache": self.prefix_cache,
+            "free": list(self._free),
+            "ref": dict(self._ref),
+            "cached": list(self._cached.items()),
+            "index": dict(self._index),
+            "hash_of": dict(self._hash_of),
+            "key_of": dict(self._key_of),
+            "peak_in_use": self.peak_in_use,
+            "total_allocs": self.total_allocs,
+            "evictions": self.evictions,
+            "hash_collisions": self.hash_collisions,
+        }
+
+    def restore(self, snap: Dict[str, Any]) -> None:
+        """Rebuild the pool exactly as snapshotted (same process, and only
+        meaningful when the device-side KV the blocks point at is intact —
+        the engine's crash-recovery path resets a FRESH pool instead)."""
+        assert snap["num_blocks"] == self.num_blocks \
+            and snap["block_size"] == self.block_size, \
+            "snapshot geometry mismatch"
+        self.prefix_cache = snap["prefix_cache"]
+        self._free = deque(snap["free"])
+        self._ref = dict(snap["ref"])
+        self._cached = OrderedDict(snap["cached"])
+        self._index = dict(snap["index"])
+        self._hash_of = dict(snap["hash_of"])
+        self._key_of = dict(snap["key_of"])
+        self.peak_in_use = snap["peak_in_use"]
+        self.total_allocs = snap["total_allocs"]
+        self.evictions = snap["evictions"]
+        self.hash_collisions = snap["hash_collisions"]
+        self.check_invariants()
 
 
 def init_paged_cache(model, num_slots: int, max_seq: int, block_size: int,

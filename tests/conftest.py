@@ -1,7 +1,15 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the host's single
 device; only launch/dryrun.py forces 512 placeholder devices."""
+import os
+
 import jax
 import pytest
+
+# the whole serving suite runs with the per-iteration block-pool audit on
+# (refcounts, ownership, writable-block exclusivity — see
+# ContinuousServingEngine._audit_pool); export REPRO_VALIDATE_POOL=0 to
+# opt out when profiling test runtime
+os.environ.setdefault("REPRO_VALIDATE_POOL", "1")
 
 
 @pytest.fixture

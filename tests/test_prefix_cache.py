@@ -325,3 +325,69 @@ def test_prefix_cache_off_matches_legacy_pool_semantics(tiny):
     assert eng.pool.cached_blocks == 0 and eng.pool.in_use == 0
     assert res["metrics"]["paged"]["prefix_hits"] == 0
     assert res["outputs"][0] == _oracle(model, params, DENSE, prompts[0], 6)
+
+
+# ------------------------------------ hash-collision hardening (ISSUE 6)
+
+def test_pool_detects_forced_hash_collision():
+    """A chain-hash collision between DIFFERENT block contents must never
+    share KV: match() verifies the stored (dense_rows, token_bytes) key
+    and stops at the first mismatch, counting the collision."""
+    from repro.serve.paged import chain_block_keys
+
+    pool = BlockPool(num_blocks=4, block_size=4)
+    toks_a = np.arange(8, dtype=np.int32)
+    toks_b = np.arange(8, dtype=np.int32) + 100
+    keys_a = chain_block_keys(toks_a, 4)
+    keys_b = chain_block_keys(toks_b, 4)
+    fake_chain = [12345, 67890]                # both contents hash here
+    a = pool.alloc(2)
+    for bid, h, k in zip(a, fake_chain, keys_a):
+        assert pool.register(bid, h, key=k)
+    # same content, verified keys → full match, no collision
+    assert pool.match(fake_chain, keys=keys_a) == a
+    assert pool.hash_collisions == 0
+    # different content colliding on the hash → rejected, counted
+    assert pool.match(fake_chain, keys=keys_b) == []
+    assert pool.hash_collisions == 1
+    # a sparse/dense row-split mismatch is content inequality too
+    split = chain_block_keys(toks_a, 4, dense_from=2)
+    assert pool.match(fake_chain, keys=split) == []
+    assert pool.hash_collisions == 2
+    # prefix verification is inductive: block 1 only reachable through a
+    # verified block 0, so a tail collision truncates the match
+    assert pool.match(fake_chain, keys=[keys_a[0], keys_b[1]]) == a[:1]
+    pool.check_invariants()
+
+
+def test_engine_survives_universal_hash_collisions(tiny, monkeypatch):
+    """Regression: with chain_block_hashes forced to collide for EVERY
+    sequence, the key check must refuse all false sharing — outputs stay
+    oracle-identical and the collisions are metered."""
+    cfg, model, params = tiny
+    monkeypatch.setattr(
+        "repro.serve.continuous.chain_block_hashes",
+        lambda tokens, bs, n_blocks=None, dense_from=None, start=0, h0=None:
+            list(range(start, n_blocks)))
+    prompts = [_rand_tokens(cfg, 14, seed=160 + i) for i in range(3)]
+    eng = ContinuousServingEngine(model, DENSE, ContinuousConfig(
+        max_seq=MAX_SEQ, num_slots=3, chunk_size=8, block_size=4,
+        validate_pool=True))
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=6, arrival=i)
+    res = eng.run(params)
+    assert eng.pool.hash_collisions >= 1, \
+        "forced collisions never reached the key check"
+    for i, p in enumerate(prompts):
+        assert res["outputs"][i] == _oracle(model, params, DENSE, p, 6), \
+            f"request {i} shared a colliding block"
+    assert eng.pool.in_use == 0
+
+
+def test_block_size_folded_into_chain_seed():
+    """Identical tokens hashed at different block sizes must not collide
+    structurally: the chain seed folds the block geometry."""
+    toks = np.arange(32, dtype=np.int32)
+    h4 = chain_block_hashes(toks, 4)
+    h8 = chain_block_hashes(toks, 8)
+    assert set(h4).isdisjoint(h8)
