@@ -1,20 +1,32 @@
 """CI gate over a ``BENCH_*.json`` trajectory: the latest run must carry
-every expected kernel row with a finite, positive wall-time.
+every expected kernel row with a finite, positive wall-time, and no row
+may regress beyond the threshold against the previous run.
 
-    PYTHONPATH=src python benchmarks/check_bench.py bench_ci.json
+    PYTHONPATH=src python benchmarks/check_bench.py bench_ci.json \
+        [--threshold 0.5] [--no-regress-gate]
 
 A kernel that stops lowering under ``REPRO_PALLAS_INTERPRET=1`` (or starts
 returning NaN timings) would otherwise just drop out of the trajectory and
 the regression would go unnoticed until someone eyeballed the JSON —
 ``benchmarks/run.py`` only exits non-zero on ordering-claim FAILs, not on
 missing rows.
+
+The regression compare is latest-vs-PREVIOUS trajectory entry, per row
+name: a row whose ``us_per_call`` grew by more than ``threshold``
+(fractional, default 0.5 — interpret-mode CPU timings are noisy) fails
+the gate unless ``--no-regress-gate`` demotes regressions to warnings.
+Rows present in only one of the two runs are never regression-compared
+(the required-row scan already catches disappearances).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import math
 import sys
 from typing import List
+
+DEFAULT_REGRESS_THRESHOLD = 0.5
 
 # one prefix per fused-kernel hot path benchmarked by kernel_bench.run()
 REQUIRED_KERNEL_ROWS = (
@@ -30,6 +42,9 @@ REQUIRED_KERNEL_ROWS = (
 # the derived column, which the FAIL scan below enforces
 REQUIRED_SERVING_ROWS = (
     "serving/prefix_reuse",
+    # fused one-dispatch step vs the legacy two-program split; derived
+    # embeds the token-identity verdict and dispatches_per_iteration
+    "serving/one_dispatch",
 )
 REQUIRED_ROWS = REQUIRED_KERNEL_ROWS + REQUIRED_SERVING_ROWS
 
@@ -75,15 +90,65 @@ def check_trajectory(path: str,
     return errors
 
 
+def _finite_timings(run) -> dict:
+    out = {}
+    for r in run.get("rows", []):
+        us = r.get("us_per_call")
+        if (isinstance(us, (int, float)) and math.isfinite(us) and us > 0):
+            out[str(r.get("name", ""))] = float(us)
+    return out
+
+
+def check_regressions(path: str,
+                      threshold: float = DEFAULT_REGRESS_THRESHOLD
+                      ) -> List[str]:
+    """Latest-vs-previous per-row wall-time compare over the trajectory.
+
+    Returns one message per row whose ``us_per_call`` grew by more than
+    ``threshold`` (fractional) since the previous run.  Trajectories with
+    fewer than two runs (fresh artifacts) have nothing to compare and
+    return [] — the health scan in ``check_trajectory`` still applies.
+    """
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return []   # unreadable is check_trajectory's complaint, not ours
+    if not isinstance(data, list) or len(data) < 2:
+        return []
+    prev, cur = _finite_timings(data[-2]), _finite_timings(data[-1])
+    problems = []
+    for name in sorted(set(prev) & set(cur)):
+        if cur[name] > prev[name] * (1.0 + threshold):
+            pct = 100.0 * (cur[name] / prev[name] - 1.0)
+            problems.append(
+                f"{name}: {prev[name]:.1f} -> {cur[name]:.1f} us/call "
+                f"(+{pct:.0f}% > {threshold:.0%} threshold)")
+    return problems
+
+
 def main(argv=None) -> int:
-    argv = sys.argv if argv is None else argv
-    path = argv[1] if len(argv) > 1 else "bench_ci.json"
-    errors = check_trajectory(path)
-    if errors:
-        for e in errors:
-            print(f"BENCH CHECK FAIL: {e}")
+    argv = sys.argv[1:] if argv is None else list(argv[1:])
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", nargs="?", default="bench_ci.json")
+    ap.add_argument("--threshold", type=float,
+                    default=DEFAULT_REGRESS_THRESHOLD,
+                    help="max fractional us_per_call growth vs the previous "
+                         "trajectory entry before the gate fails")
+    ap.add_argument("--no-regress-gate", action="store_true",
+                    help="report regressions as warnings instead of "
+                         "failing the gate")
+    args = ap.parse_args(argv)
+    errors = check_trajectory(args.path)
+    regressions = check_regressions(args.path, args.threshold)
+    for e in errors:
+        print(f"BENCH CHECK FAIL: {e}")
+    for r in regressions:
+        tag = "WARN" if args.no_regress_gate else "FAIL"
+        print(f"BENCH REGRESSION {tag}: {r}")
+    if errors or (regressions and not args.no_regress_gate):
         return 1
-    with open(path) as f:
+    with open(args.path) as f:
         run = json.load(f)[-1]
     print(f"bench check OK: {len(run.get('rows', []))} rows "
           f"@ {run.get('utc', '?')} "

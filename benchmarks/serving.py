@@ -61,13 +61,32 @@ def run() -> list[str]:
     res = warmed_run(eng)
     m = res["metrics"]
     cont_us = m["wall_s"] / max(m["generated_tokens"], 1) * 1e6
-    no_retrace = (m["trace_counts"]["prefill"] == 1
-                  and m["trace_counts"]["decode"] == 1)
+    # fused one-dispatch default: one step program per phase-presence bucket
+    no_retrace = all(v == 1 for v in m["trace_counts"].values())
+    traces = "+".join(str(v) for _, v in sorted(m["trace_counts"].items()))
     rows.append(csv_row(
         "serving/continuous", cont_us,
-        f"tok_s={m['tokens_per_s']:.1f};traces="
-        f"{m['trace_counts']['prefill']}+{m['trace_counts']['decode']};"
+        f"tok_s={m['tokens_per_s']:.1f};traces={traces};"
         f"single_trace_per_bucket={'PASS' if no_retrace else 'FAIL'}"))
+
+    # --- one-dispatch iterations vs the legacy two-program split ----------
+    # same staggered stream through the legacy split (fused_step=False);
+    # the fused engine above must emit identical greedy tokens at exactly
+    # one compiled dispatch per work iteration
+    legacy = ContinuousServingEngine(model, policy, ContinuousConfig(
+        max_seq=_MAX_SEQ, num_slots=3, chunk_size=16, fused_step=False))
+    lres = warmed_run(legacy)
+    lm = lres["metrics"]
+    identical = lres["outputs"] == res["outputs"]
+    one_dispatch = m["dispatches_per_iteration"] == 1.0
+    rows.append(csv_row(
+        "serving/one_dispatch", cont_us,
+        f"fused_tok_s={m['tokens_per_s']:.1f};"
+        f"legacy_tok_s={lm['tokens_per_s']:.1f};"
+        f"dpi={m['dispatches_per_iteration']:.2f}"
+        f"_vs_{lm['dispatches_per_iteration']:.2f};"
+        f"one_dispatch={'PASS' if one_dispatch else 'FAIL'};"
+        f"token_identity={'PASS' if identical else 'FAIL'}"))
 
     # --- same traffic under memory pressure: 50% block pool ---------------
     # the paged allocator's reason to exist — serve the identical stream

@@ -54,8 +54,10 @@ def sparse_matmul(
     w: jax.Array,
     scale: jax.Array | None,
     policy: SparsityPolicy,
+    bias: jax.Array | None = None,
 ) -> jax.Array:
-    """N:M-sparsified ``x @ w`` with the policy's mode.
+    """N:M-sparsified ``x @ w`` (+ optional fused ``bias``) with the
+    policy's mode.
 
     per-token mode: mask then dense matmul (functional reproduction — on TPU
     the MXU cannot skip per-row patterns; see DESIGN.md §2).
@@ -86,13 +88,16 @@ def sparse_matmul(
             from repro.kernels import ops
 
             if policy.tile_consensus:
-                return ops.nm_spmm(x, w, scale, policy.n, policy.m,
-                                   tile=policy.tile_size)
-            return ops.nm_prune_matmul(x, w, scale, policy.n, policy.m)
+                y = ops.nm_spmm(x, w, scale, policy.n, policy.m,
+                                tile=policy.tile_size)
+                return y if bias is None else y + bias
+            return ops.nm_prune_matmul(x, w, scale, policy.n, policy.m,
+                                       bias=bias)
 
     if not policy.tile_consensus:
         xp = prune_input(x, scale, policy)
-        return xp @ w
+        y = xp @ w
+        return y if bias is None else y + bias
 
     *lead, d_in = x.shape
     t = 1
@@ -115,7 +120,8 @@ def sparse_matmul(
 
     yt = jax.vmap(one_tile)(xt)                          # (n_tiles, ts, d_out)
     y = yt.reshape(n_tiles * ts, -1)[:t]
-    return y.reshape(*lead, w.shape[-1])
+    y = y.reshape(*lead, w.shape[-1])
+    return y if bias is None else y + bias
 
 
 def precompute_scales(params: Any, policy: SparsityPolicy) -> Any:

@@ -21,14 +21,25 @@ VMEM/registers, never HBM):
                      ≥ ``kv_len`` / off-band blocks before their matmuls
                      issue — chunked prefill at cache offsets and
                      vector-position decode share one kernel
+  paged_kv_scatter — the write side of the paged pool (same module): per
+                     logical block the scalar-prefetched table picks the
+                     physical block, a one-hot selection matmul merges the
+                     chunk's rows into it, and ``input_output_aliases``
+                     updates the pool in place — invisible grid steps
+                     write nothing, so untouched blocks keep their
+                     content.  Replaces the host-side flat-index
+                     ``.at[].set`` scatter in the serving hot path.
 
 Dispatch order for model projections (``layers.linear.sparse_linear``):
 
   1. ``SparsityPolicy.use_pallas_kernels`` — the policy flag routes each
      prunable linear onto the fused kernel for its mode (per-token →
      ``nm_prune_matmul``; tile-consensus → ``nm_spmm``; Outstanding-sparse
-     W8A8 → ``osparse_matmul``).  Scan-stacked ``layer_flag`` models always
-     fall back to the jnp mask-select form.
+     W8A8 → ``osparse_matmul``; decode-phase W8A8 → ``osparse_matmul``
+     with static ``prune=False``, skipping selection in-kernel).  A
+     projection bias rides the kernels' f32 dequant/accumulator epilogue
+     instead of a separate HBM pass.  Scan-stacked ``layer_flag`` models
+     always fall back to the jnp mask-select form.
   2. ``REPRO_PALLAS_INTERPRET`` env switch — ``1`` (default, CPU container)
      runs the kernels through the Pallas interpreter; ``0`` compiles the
      same BlockSpecs to Mosaic on a real TPU.
@@ -65,18 +76,33 @@ length ``kv_len``; row bytes r = Hkv·hd·s):
                     attention reads O(pos) rows instead of O(mb·bs), and
                     skipped blocks (unallocated tail, causal future,
                     off-window) never issue their DMA-consuming matmuls.
+  flat-idx scatter  the jnp KV write builds (B·T,) flat indices and
+                    scatters through the POOL-SIZED flat view — XLA
+                    round-trips the full pool value per chunk/decode call
+                    (read + write of num_blocks·bs·r per K and V leaf),
+                    independent of how few rows change.
+  paged_kv_scatter  touches only the ≤ ceil(T/bs)+1 logical blocks a
+                    chunk overlaps, per batch row: each visible block is
+                    one bs·r read + write through the aliased output;
+                    invisible grid steps elide even the refetch (their
+                    index map parks on an already-resident block and the
+                    kernel writes nothing).
 
-Dispatch for paged attention (``models/attention.paged_attention``) runs
-the same ladder as the projections: ``SparsityPolicy.use_pallas_kernels``
-→ ``REPRO_PALLAS_INTERPRET`` (interpret vs Mosaic) → the jnp
-gather-then-attend oracle (always used for windowed paged shapes and
-non-tile-divisible query counts).
+Dispatch for the paged pool (``models/attention.paged_attention`` reads,
+``models/attention.paged_kv_update`` writes) runs the same ladder as the
+projections: ``SparsityPolicy.use_pallas_kernels`` →
+``REPRO_PALLAS_INTERPRET`` (interpret vs Mosaic) → the jnp
+gather-then-attend / flat-index-scatter oracles (the gather oracle is
+always used for windowed paged shapes and non-tile-divisible query
+counts).  Both directions carry chaos-harness sites
+(``kernel.paged_attention``, ``kernel.paged_scatter``).
 
 ``ops``  — jit'd wrappers (batched, padded, interpret-mode switch)
 ``ref``  — pure-jnp oracles used by the allclose test sweeps
 """
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.paged_attention import paged_attention_pallas
+from repro.kernels.paged_attention import (paged_attention_pallas,
+                                           paged_kv_scatter_pallas)
 from repro.kernels.ops import (
     nm_prune,
     nm_prune_matmul,
@@ -93,4 +119,5 @@ __all__ = [
     "w8a8_matmul",
     "flash_attention_pallas",
     "paged_attention_pallas",
+    "paged_kv_scatter_pallas",
 ]

@@ -36,8 +36,8 @@ from repro.kernels.nm_prune import _select_topn_mask
 __all__ = ["nm_prune_matmul_pallas"]
 
 
-def _kernel(x_ref, w_ref, scale_ref, o_ref, acc_ref, *, n: int, m: int,
-            has_scale: bool, k_steps: int):
+def _kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *, n: int,
+            m: int, has_scale: bool, has_bias: bool, k_steps: int):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -56,7 +56,10 @@ def _kernel(x_ref, w_ref, scale_ref, o_ref, acc_ref, *, n: int, m: int,
 
     @pl.when(k == k_steps - 1)
     def _finish():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        acc = acc_ref[...]
+        if has_bias:  # bias-add folded into the epilogue (free: acc is hot)
+            acc = acc + bias_ref[...].astype(jnp.float32)[None, :]
+        o_ref[...] = acc.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("n", "m", "block_t", "block_o",
@@ -67,6 +70,7 @@ def nm_prune_matmul_pallas(
     scale: Optional[jax.Array],         # (D,) or None
     n: int,
     m: int,
+    bias: Optional[jax.Array] = None,   # (N_out,) or None — epilogue add
     block_t: int = 256,
     block_o: int = 256,
     block_k: int = 512,
@@ -83,19 +87,23 @@ def nm_prune_matmul_pallas(
     has_scale = scale is not None
     if not has_scale:
         scale = jnp.ones((d,), jnp.float32)
+    has_bias = bias is not None
+    if not has_bias:
+        bias = jnp.zeros((n_out,), jnp.float32)
 
     out_dtype = jnp.result_type(x.dtype, w.dtype)
     return pl.pallas_call(
         functools.partial(_kernel, n=n, m=m, has_scale=has_scale,
-                          k_steps=k_steps),
+                          has_bias=has_bias, k_steps=k_steps),
         grid=(t // bt, n_out // bo, k_steps),
         in_specs=[
             pl.BlockSpec((bt, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bk, bo), lambda i, j, k: (k, j)),
             pl.BlockSpec((bk,), lambda i, j, k: (k,)),
+            pl.BlockSpec((bo,), lambda i, j, k: (j,)),
         ],
         out_specs=pl.BlockSpec((bt, bo), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((t, n_out), out_dtype),
         scratch_shapes=[pltpu.VMEM((bt, bo), jnp.float32)],
         interpret=interpret,
-    )(x, w, scale)
+    )(x, w, scale, bias)

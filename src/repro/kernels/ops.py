@@ -118,12 +118,16 @@ def nm_prune_matmul(
     scale: Optional[jax.Array],
     n: int,
     m: int,
+    bias: Optional[jax.Array] = None,
     block_t: int = 256,
     block_o: int = 256,
     block_k: int = 512,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Fused per-token prune + GEMM over any (..., D) input (one X pass)."""
+    """Fused per-token prune + GEMM over any (..., D) input (one X pass).
+
+    ``bias`` (``(N_out,)``) is folded into the kernel epilogue — the add
+    happens on the hot f32 accumulator instead of a separate HBM pass."""
     interpret = default_interpret() if interpret is None else interpret
     xf, lead = _flatten(x)
     t, d = xf.shape
@@ -136,8 +140,10 @@ def nm_prune_matmul(
     w = _pad_to(_pad_to(w, 0, dp), 1, op)
     if scale is not None:
         scale = _pad_to(scale, 0, dp)
-    y = nm_prune_matmul_pallas(xf, w, scale, n, m, block_t=bt, block_o=bo,
-                               block_k=bk, interpret=interpret)
+    if bias is not None:
+        bias = _pad_to(bias, 0, op)
+    y = nm_prune_matmul_pallas(xf, w, scale, n, m, bias=bias, block_t=bt,
+                               block_o=bo, block_k=bk, interpret=interpret)
     return y[:t, :n_out].reshape(*lead, n_out)
 
 
@@ -187,6 +193,8 @@ def osparse_matmul(
     n: int,
     m: int,
     act_scale: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+    prune: bool = True,
     per_token: bool = False,
     block_t: int = 256,
     block_o: int = 256,
@@ -196,9 +204,13 @@ def osparse_matmul(
     """Fused Outstanding-sparse projection over any (..., D) input.
 
     Returns float32 (dequantized) — callers cast back to the model dtype,
-    matching ``quant.quantized_matmul``.
+    matching ``quant.quantized_matmul``.  ``bias`` is folded into the
+    dequant epilogue; ``prune=False`` skips the N:M selection statically,
+    turning the same kernel into the decode-phase smoothed W8A8 GEMM.
     """
     interpret = default_interpret() if interpret is None else interpret
+    if not prune:
+        n = m = 1  # no selection → no channel-group divisibility constraint
     xf, lead = _flatten(x)
     t, d = xf.shape
     n_out = wq.shape[-1]
@@ -212,8 +224,11 @@ def osparse_matmul(
     w_scale = _pad_to(w_scale, 0, op)
     if amber is not None:
         amber = _pad_to(amber, 0, dp)
+    if bias is not None:
+        bias = _pad_to(bias, 0, op)
     y = osparse_matmul_pallas(xf, wq, smooth, amber, w_scale, act_scale,
-                              n, m, per_token=per_token, block_t=bt,
+                              n, m, bias=bias, prune=prune,
+                              per_token=per_token, block_t=bt,
                               block_o=bo, block_k=bk, interpret=interpret)
     return y[:t, :n_out].reshape(*lead, n_out)
 

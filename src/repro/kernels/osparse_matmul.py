@@ -46,9 +46,15 @@ __all__ = ["osparse_matmul_pallas"]
 _EPS = 1e-8  # matches repro.core.quant._EPS
 
 
-def _pruned_smoothed(x, smooth, amber, *, n, m, has_amber):
-    """smooth-divide + score + N:M mask, all in registers. (bt, bk) f32."""
+def _pruned_smoothed(x, smooth, amber, *, n, m, has_amber, prune=True):
+    """smooth-divide + score + N:M mask, all in registers. (bt, bk) f32.
+
+    ``prune=False`` (static) skips scoring/selection entirely — the same
+    kernel then runs the plain smoothed W8A8 chain, which is what the
+    decode phase uses (the policy gates pruning to prefill)."""
     xs = x.astype(jnp.float32) / smooth.astype(jnp.float32)[None, :]
+    if not prune:
+        return xs
     s = jnp.abs(xs)
     if has_amber:
         s = s * amber.astype(jnp.float32)[None, :]
@@ -61,15 +67,20 @@ def _quantize(xp, scale):
     return jnp.clip(jnp.round(xp / scale), -127, 127).astype(jnp.int8)
 
 
-def _kernel(x_ref, wq_ref, smooth_ref, amber_ref, ws_ref, as_ref, o_ref,
-            acc_ref, amax_ref, *, n: int, m: int, has_amber: bool,
-            per_token: bool, k_steps: int):
+def _kernel(x_ref, wq_ref, smooth_ref, amber_ref, ws_ref, as_ref, bias_ref,
+            o_ref, acc_ref, amax_ref, *, n: int, m: int, has_amber: bool,
+            has_bias: bool, prune: bool, per_token: bool, k_steps: int):
     j = pl.program_id(1)
     k = pl.program_id(2)
 
     def xp():
         return _pruned_smoothed(x_ref[...], smooth_ref[...], amber_ref[...],
-                                n=n, m=m, has_amber=has_amber)
+                                n=n, m=m, has_amber=has_amber, prune=prune)
+
+    def epilogue(o):  # (bt, bo) f32 dequantized — fold the bias-add in
+        if has_bias:
+            o = o + bias_ref[...].astype(jnp.float32)[None, :]
+        return o
 
     if per_token:
         # ---- sweep 1: reduce the per-token absmax of the pruned rows.
@@ -104,8 +115,8 @@ def _kernel(x_ref, wq_ref, smooth_ref, amber_ref, ws_ref, as_ref, o_ref,
         def _finish():
             scale = jnp.maximum(amax_ref[...], _EPS) / 127.0
             w_scale = ws_ref[...].astype(jnp.float32)
-            o_ref[...] = (acc_ref[...].astype(jnp.float32) * scale
-                          * w_scale[None, :]).astype(o_ref.dtype)
+            o_ref[...] = epilogue(acc_ref[...].astype(jnp.float32) * scale
+                                  * w_scale[None, :]).astype(o_ref.dtype)
     else:
         @pl.when(k == 0)
         def _init():
@@ -121,12 +132,12 @@ def _kernel(x_ref, wq_ref, smooth_ref, amber_ref, ws_ref, as_ref, o_ref,
         @pl.when(k == k_steps - 1)
         def _finish():
             w_scale = ws_ref[...].astype(jnp.float32)
-            o_ref[...] = (acc_ref[...].astype(jnp.float32) * act_scale
-                          * w_scale[None, :]).astype(o_ref.dtype)
+            o_ref[...] = epilogue(acc_ref[...].astype(jnp.float32) * act_scale
+                                  * w_scale[None, :]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "m", "per_token", "block_t",
-                                             "block_o", "block_k",
+@functools.partial(jax.jit, static_argnames=("n", "m", "prune", "per_token",
+                                             "block_t", "block_o", "block_k",
                                              "interpret"))
 def osparse_matmul_pallas(
     x: jax.Array,                       # (T, D) raw (unsmoothed) activations
@@ -137,6 +148,8 @@ def osparse_matmul_pallas(
     act_scale: Optional[jax.Array],     # scalar f32, required unless per_token
     n: int,
     m: int,
+    bias: Optional[jax.Array] = None,   # (N_out,) or None — epilogue add
+    prune: bool = True,                 # False → plain smoothed W8A8 (decode)
     per_token: bool = False,
     block_t: int = 256,
     block_o: int = 256,
@@ -145,6 +158,8 @@ def osparse_matmul_pallas(
 ) -> jax.Array:
     t, d = x.shape
     n_out = wq.shape[-1]
+    if not prune:
+        n = m = 1  # selection is skipped; neutralize the bk % m constraint
     bt = min(block_t, t)
     bo = min(block_o, n_out)
     bk = min(block_k, d)
@@ -154,6 +169,9 @@ def osparse_matmul_pallas(
     has_amber = amber is not None
     if not has_amber:
         amber = jnp.ones((d,), jnp.float32)
+    has_bias = bias is not None
+    if not has_bias:
+        bias = jnp.zeros((n_out,), jnp.float32)
     if act_scale is None:
         if not per_token:
             raise ValueError("act_scale is required for per-tensor mode")
@@ -166,6 +184,7 @@ def osparse_matmul_pallas(
 
     return pl.pallas_call(
         functools.partial(_kernel, n=n, m=m, has_amber=has_amber,
+                          has_bias=has_bias, prune=prune,
                           per_token=per_token, k_steps=k_steps),
         grid=(t // bt, n_out // bo, k_grid),
         in_specs=[
@@ -175,6 +194,7 @@ def osparse_matmul_pallas(
             pl.BlockSpec((bk,), d_block),
             pl.BlockSpec((bo,), lambda i, j, k: (j,)),
             pl.BlockSpec((1,), lambda i, j, k: (0,)),
+            pl.BlockSpec((bo,), lambda i, j, k: (j,)),
         ],
         out_specs=pl.BlockSpec((bt, bo), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((t, n_out), jnp.float32),
@@ -183,5 +203,5 @@ def osparse_matmul_pallas(
             pltpu.VMEM((bt, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(x, wq, smooth, amber, w_scale, jnp.asarray(act_scale,
-                                                 jnp.float32).reshape(1))
+    )(x, wq, smooth, amber, w_scale,
+      jnp.asarray(act_scale, jnp.float32).reshape(1), bias)

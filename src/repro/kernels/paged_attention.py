@@ -42,7 +42,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.flash_attention import (_NEG, softmax_finalize,
                                            softmax_init, softmax_update)
 
-__all__ = ["paged_attention_pallas", "paged_kernel_covers"]
+__all__ = ["paged_attention_pallas", "paged_kv_scatter_pallas",
+           "paged_kernel_covers"]
 
 
 def paged_kernel_covers(t: int) -> bool:
@@ -189,3 +190,131 @@ def paged_attention_pallas(
         interpret=interpret,
     )(tab, qoff, kvl, q, k_pool, v_pool)
     return out
+
+
+def _scatter_visible(tab_ref, pos_ref, len_ref, bi, ci, *, bs: int, mb: int):
+    """(physical block id, receives-any-row?) for one scatter grid step.
+
+    Logical block ``pos[bi] // bs + ci`` receives rows iff it overlaps the
+    row's write span ``[pos, pos + chunk_len)``, sits inside the table, and
+    is actually allocated.  Shared by the kernel body and the pool index
+    maps — same contract as ``_block_visible`` above: disagreement would
+    mean the body merges into a block the pipeline never fetched.
+    """
+    lb = pos_ref[bi] // bs + ci
+    pb = tab_ref[bi, jnp.clip(lb, 0, mb - 1)]
+    lo = lb * bs
+    p0 = pos_ref[bi]
+    vis = ((lb < mb) & (pb >= 0)
+           & (lo < p0 + len_ref[bi]) & (lo + bs > p0))
+    return lb, pb, vis
+
+
+def _scatter_kernel(tab_ref, pos_ref, len_ref,          # scalar prefetch
+                    kn_ref, vn_ref, kin_ref, vin_ref, ko_ref, vo_ref, *,
+                    bs: int, mb: int, t: int):
+    bi = pl.program_id(0)
+    ci = pl.program_id(1)
+    p0 = pos_ref[bi]
+    cl = len_ref[bi]
+    lb, _, vis = _scatter_visible(tab_ref, pos_ref, len_ref, bi, ci,
+                                  bs=bs, mb=mb)
+    lo = lb * bs
+
+    # invisible steps write NOTHING: the pool is aliased in-place, so an
+    # unwritten output block keeps its current content.  The pool
+    # invariant (no physical block reachable from two slots) means each
+    # visible step is the sole writer of its block this call, so the
+    # input-side fetch is always the correct merge base.
+    @pl.when(vis)
+    def _merge():
+        # row r of this physical block holds absolute position lo + r; it
+        # takes chunk token tk iff lo + r == p0 + tk and tk is within the
+        # valid span.  The one-hot selection matrix turns the scatter into
+        # an MXU contraction against the whole chunk — no per-row dynamic
+        # indexing in-kernel.
+        row = jax.lax.broadcasted_iota(jnp.int32, (bs, t), 0)
+        tok = jax.lax.broadcasted_iota(jnp.int32, (bs, t), 1)
+        sel = ((lo + row == p0 + tok) & (tok < cl)).astype(jnp.float32)
+        wr = (lo + row[:, 0] >= p0) & (lo + row[:, 0] < p0 + cl)  # (bs,)
+        wr = wr[:, None, None]
+
+        for new_ref, cur_ref, out_ref in ((kn_ref, kin_ref, ko_ref),
+                                          (vn_ref, vin_ref, vo_ref)):
+            new = new_ref[0].reshape(t, -1).astype(jnp.float32)
+            rows = jnp.dot(sel, new, preferred_element_type=jnp.float32)
+            cur = cur_ref[0]
+            rows = rows.reshape(cur.shape).astype(cur.dtype)
+            out_ref[0] = jnp.where(wr, rows, cur)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_kv_scatter_pallas(
+    k_new: jax.Array,         # (B, T, Hkv, hd) chunk K (decode: T == 1)
+    v_new: jax.Array,         # (B, T, Hkv, hd)
+    k_pool: jax.Array,        # (num_blocks, block_size, Hkv, hd)
+    v_pool: jax.Array,        # (num_blocks, block_size, Hkv, hd)
+    block_table: jax.Array,   # (B, max_blocks) int32, -1 = unallocated
+    pos: jax.Array,           # (B,) int32 absolute position of k_new[:, 0]
+    chunk_len: jax.Array,     # (B,) int32 valid rows of k_new per row
+    interpret: bool = True,   # CPU container default
+) -> tuple[jax.Array, jax.Array]:
+    """Write chunk K/V rows into the shared pool through the block table,
+    entirely in-kernel: the grid walks the logical blocks the chunk spans,
+    resolves each to a physical block via the scalar-prefetched table, and
+    merges the chunk rows into that block in VMEM.  The pools are aliased
+    input→output (``input_output_aliases``), so nothing pool-shaped is
+    gathered or scattered outside the ``pallas_call`` — this replaces the
+    host-side flat-index ``.at[].set`` that re-wrote the whole pool view.
+
+    Rows whose target block is unallocated (-1) or out of table range are
+    dropped, matching the jnp oracle's ``mode="drop"`` fence.
+    """
+    b, t = k_new.shape[:2]
+    nb, bs, hkv, hd = k_pool.shape
+    mb = block_table.shape[1]
+    assert v_new.shape == k_new.shape and v_pool.shape == k_pool.shape
+    # an unaligned T-row chunk spans at most this many logical blocks
+    n_lb = min((t - 1) // bs + 2, t)
+
+    tab = block_table.astype(jnp.int32)
+    posv = pos.astype(jnp.int32)
+    cl = chunk_len.astype(jnp.int32)
+
+    def pool_index(bi, ci, tab_ref, pos_ref, len_ref):
+        _, pb, vis = _scatter_visible(tab_ref, pos_ref, len_ref, bi, ci,
+                                      bs=bs, mb=mb)
+        # invisible steps remap to the row's first block (clipped for
+        # empty rows): consecutive skipped steps keep the index unchanged
+        # so refetch elision drops their DMA, and the identity write-back
+        # is a no-op wherever it lands
+        pb = jnp.where(vis, pb, tab_ref[bi, 0])
+        return (jnp.maximum(pb, 0), 0, 0, 0)
+
+    def new_index(bi, ci, *_):
+        return (bi, 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, n_lb),
+        in_specs=[
+            pl.BlockSpec((1, t, hkv, hd), new_index),   # k_new
+            pl.BlockSpec((1, t, hkv, hd), new_index),   # v_new
+            pl.BlockSpec((1, bs, hkv, hd), pool_index),  # k_pool (in)
+            pl.BlockSpec((1, bs, hkv, hd), pool_index),  # v_pool (in)
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, hkv, hd), pool_index),  # k_pool (out)
+            pl.BlockSpec((1, bs, hkv, hd), pool_index),  # v_pool (out)
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_scatter_kernel, bs=bs, mb=mb, t=t),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+                   jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype)],
+        # operand indices count the scalar-prefetch args: k_pool is
+        # operand 5, v_pool operand 6 → outputs 0, 1 (updated in place)
+        input_output_aliases={5: 0, 6: 1},
+        interpret=interpret,
+    )(tab, posv, cl, k_new, v_new, k_pool, v_pool)

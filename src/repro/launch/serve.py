@@ -60,6 +60,10 @@ def main(argv=None):
     ap.add_argument("--ttl", type=int, default=None, metavar="ITERS",
                     help="per-request deadline in scheduler iterations "
                          "(--trace): requests exceeding it end TIMED_OUT")
+    ap.add_argument("--no-fused-step", action="store_true",
+                    help="legacy two-program iterations (separate prefill "
+                         "and decode dispatches) instead of the fused "
+                         "one-dispatch step program")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -143,7 +147,7 @@ def _trace_mode(args, cfg, model, params, policy):
         paged=not args.no_paged, block_size=args.block_size,
         num_blocks=args.num_blocks,
         prefix_cache=not args.no_prefix_cache,
-        ttl_default=args.ttl))
+        ttl_default=args.ttl, fused_step=not args.no_fused_step))
     sysp = np.asarray(jax.random.randint(
         jax.random.PRNGKey(99), (args.shared_prefix,), 0, cfg.vocab_size))
     extras = {}
@@ -197,9 +201,13 @@ def _trace_mode(args, cfg, model, params, policy):
         print(f"# ERROR: {len(leaked)} request(s) leaked in a non-terminal "
               f"state at drain: rids {leaked}")
         return 1
-    print(f"# traces: prefill={m['trace_counts']['prefill']} "
-          f"decode={m['trace_counts']['decode']} (shape buckets: "
-          f"chunk={args.chunk}, decode batch={args.slots})")
+    tc = ", ".join(f"{k}={v}" for k, v in sorted(m["trace_counts"].items()))
+    print(f"# traces: {tc} (shape buckets: chunk={args.chunk}, "
+          f"decode batch={args.slots})")
+    print(f"# dispatches: {m['dispatches']} programs / "
+          f"{m['iterations']} iterations = "
+          f"{m['dispatches_per_iteration']:.2f} per work iteration "
+          f"({'fused one-dispatch step' if not args.no_fused_step else 'legacy two-program split'})")
     pg = m["paged"]
     if pg["enabled"]:
         print(f"# paged KV: block_size={pg['block_size']} "

@@ -60,23 +60,23 @@ def _quantized(x: jax.Array, p: Dict[str, jax.Array], prune: bool,
 
     With ``policy.use_pallas_kernels`` the whole chain collapses into one
     fused ``osparse_matmul`` pallas_call (no smoothed/masked/quantized
-    copies in HBM).  ``layer_flag`` models keep the jnp mask-select form —
-    the flag picks pruned vs dense *input*, which the fused GEMM cannot
+    copies in HBM) — for BOTH phases: the decode-phase call sets
+    ``prune=False`` statically, which skips the N:M selection in-kernel and
+    runs the plain smoothed W8A8 GEMM, and the bias-add rides the dequant
+    epilogue.  ``layer_flag`` models keep the jnp mask-select form — the
+    flag picks pruned vs dense *input*, which the fused GEMM cannot
     express without computing both.
     """
     per_token = bool(p.get("per_token", False))
-    if prune and layer_flag is None and policy.use_pallas_kernels:
+    if layer_flag is None and policy.use_pallas_kernels:
         from repro.kernels import ops
 
         y = ops.osparse_matmul(
             x, p["wq"], p["smooth"], p.get(SCALE_KEY), p["w_scale"],
             policy.n, policy.m,
             act_scale=None if per_token else p["act_scale"],
-            per_token=per_token)
-        y = y.astype(x.dtype)
-        if "b" in p:
-            y = y + p["b"]
-        return y
+            bias=p.get("b"), prune=prune, per_token=per_token)
+        return y.astype(x.dtype)
 
     xs = x.astype(jnp.float32) / p["smooth"]
     if prune:
@@ -125,14 +125,15 @@ def sparse_linear(
     use_fused = policy.use_pallas_kernels and layer_flag is None
     if policy.tile_consensus:
         pol = policy if use_fused else policy.with_(use_pallas_kernels=False)
-        y = pruner.sparse_matmul(x, p["w"], scale, pol)
+        y = pruner.sparse_matmul(x, p["w"], scale, pol, bias=p.get("b"))
         if layer_flag is not None:
             # compacted inputs can't be element-wise selected against the
             # dense ones, so flagged layers pick between the two outputs
-            y = jnp.where(layer_flag, y, x @ p["w"])
+            y = jnp.where(layer_flag, y, dense_linear(x, p))
     elif use_fused:
-        # fused prune+GEMM path (one pallas_call under the policy flag)
-        y = pruner.sparse_matmul(x, p["w"], scale, policy)
+        # fused prune+GEMM path (one pallas_call under the policy flag,
+        # bias-add folded into the kernel epilogue)
+        y = pruner.sparse_matmul(x, p["w"], scale, policy, bias=p.get("b"))
     else:
         # mask-select form: scan-stacked models pick pruned vs dense input
         # with a traced per-layer flag, so the mask must be materialized
@@ -140,6 +141,6 @@ def sparse_linear(
         if layer_flag is not None:
             xp = jnp.where(layer_flag, xp, x)
         y = xp @ p["w"]
-    if "b" in p:
-        y = y + p["b"]
+        if "b" in p:
+            y = y + p["b"]
     return y

@@ -262,6 +262,69 @@ def gather_kv_blocks(pool: jax.Array, block_table: jax.Array) -> jax.Array:
     return g.reshape(b, mb * bs, *pool.shape[2:])
 
 
+def paged_kv_update(
+    k_pool: jax.Array,             # (num_blocks, block_size, Hkv, hd)
+    v_pool: jax.Array,
+    k_new: jax.Array,              # (B, T, Hkv, hd) — decode: T == 1
+    v_new: jax.Array,
+    block_table: jax.Array,        # (B, max_blocks) int32, -1 = unallocated
+    pos: jax.Array | int,          # scalar or (B,) absolute pos of row 0
+    chunk_len: Optional[jax.Array | int] = None,  # valid rows (default T)
+    *,
+    use_kernel: bool = False,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Write new K/V rows into the pooled cache through the block table.
+
+    Same dispatch ladder as :func:`paged_attention`: ``use_kernel`` routes
+    to :func:`repro.kernels.paged_attention.paged_kv_scatter_pallas`
+    (pools aliased in-place, nothing pool-shaped touched outside the
+    ``pallas_call``); the jnp flat-index scatter below is the bit-exact
+    oracle and the fallback.  Rows landing on an unallocated (-1) or
+    out-of-range block are dropped — the same fence either way.
+
+    Chunked prefill (``B == 1``, scalar ``pos``, partial ``chunk_len``)
+    and slot-batched decode (``T == 1``, vector ``pos``) are the same op.
+    """
+    b, t = k_new.shape[:2]
+    nb, bs = k_pool.shape[:2]
+    mb = block_table.shape[1]
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    cl = (jnp.full((b,), t, jnp.int32) if chunk_len is None else
+          jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32).reshape(-1),
+                           (b,)))
+    if use_kernel:
+        # chaos-harness injection site — see paged_attention below for the
+        # trace-time compile_error / fallback semantics
+        from repro.serve.faults import KernelFault, fire as _fire_fault
+
+        kind = _fire_fault("kernel.paged_scatter")
+        if kind == "compile_error":
+            raise KernelFault(
+                "injected paged KV scatter kernel compile failure")
+        if kind != "fallback":
+            from repro.kernels.ops import default_interpret
+            from repro.kernels.paged_attention import paged_kv_scatter_pallas
+
+            interp = default_interpret() if interpret is None else interpret
+            return paged_kv_scatter_pallas(k_new, v_new, k_pool, v_pool,
+                                           block_table, posv, cl,
+                                           interpret=interp)
+    # jnp oracle: flat-index scatter over the (nb*bs, ...) pool view
+    i = jnp.arange(t)
+    wpos = posv[:, None] + i[None, :]                       # (B, T) abs pos
+    blk = block_table[jnp.arange(b)[:, None],
+                      jnp.clip(wpos // bs, 0, mb - 1)]
+    flat = jnp.where((i[None, :] < cl[:, None]) & (blk >= 0)
+                     & (wpos // bs < mb),
+                     blk * bs + wpos % bs, nb * bs)         # OOB → dropped
+    fk = k_pool.reshape(nb * bs, *k_pool.shape[2:]).at[flat.reshape(-1)].set(
+        k_new.reshape(b * t, *k_new.shape[2:]), mode="drop")
+    fv = v_pool.reshape(nb * bs, *v_pool.shape[2:]).at[flat.reshape(-1)].set(
+        v_new.reshape(b * t, *v_new.shape[2:]), mode="drop")
+    return fk.reshape(k_pool.shape), fv.reshape(v_pool.shape)
+
+
 def paged_attention(
     q: jax.Array,                  # (B, T, Hq, hd)
     k_pool: jax.Array,             # (num_blocks, block_size, Hkv, hd)

@@ -29,7 +29,8 @@ from repro.configs.base import ModelConfig
 from repro.core.policy import SparsityPolicy
 from repro.layers.linear import init_linear, sparse_linear
 from repro.models import common
-from repro.models.attention import attention, paged_attention
+from repro.models.attention import (attention, paged_attention,
+                                    paged_kv_update)
 from repro.models.mlp import init_mlp, mlp
 from repro.models.moe import init_moe, moe
 from repro.models.rglru import init_rglru_block, init_rglru_state, rglru_block
@@ -257,28 +258,24 @@ def _attn_block_apply(
     elif block_table is not None:
         # paged cache: K/V live in a pooled (num_blocks, block_size, Hkv,
         # hd) array shared by every slot; logical row p of a slot maps to
-        # flat physical row table[p // bs] * bs + p % bs.  Writes scatter
-        # through the table (unallocated / pad rows map out of bounds and
-        # drop); reads gather a contiguous logical view per row and fence
-        # stale or unallocated positions with kv_len, exactly like the
-        # dense paths below.
+        # physical row (table[p // bs], p % bs).  Writes scatter through
+        # the table (unallocated / pad rows drop) and reads fence stale or
+        # unallocated positions with kv_len; both dispatch through the
+        # kernel ladder in models/attention — with kernels on, neither
+        # direction touches a pool-shaped array outside a pallas_call.
         assert window is None, "paged KV does not cover sliding-window rings"
-        nb, bs_ = cache["k"].shape[0], cache["k"].shape[1]
+        bs_ = cache["k"].shape[1]
         mb = block_table.shape[1]
         # same policy flag that routes projections onto the fused kernels
-        # sends paged attention through the in-kernel block-table walk
-        # (no gathered logical view); jnp gather stays the oracle fallback
+        # sends the KV scatter AND the attention through the in-kernel
+        # block-table walk (pool aliased in-place, no gathered logical
+        # view); the jnp flat-index scatter / gather stay the oracles
         use_kernel = bool(policy.use_pallas_kernels)
-        flat_k = cache["k"].reshape(nb * bs_, cfg.n_kv_heads, cfg.head_dim)
-        flat_v = cache["v"].reshape(nb * bs_, cfg.n_kv_heads, cfg.head_dim)
         if t == 1:  # vector-pos decode: every row writes at its own depth
             posv = pos if jnp.ndim(pos) == 1 else jnp.broadcast_to(pos, (b,))
-            blk = block_table[jnp.arange(b), posv // bs_]
-            flat = jnp.where(blk >= 0, blk * bs_ + posv % bs_, nb * bs_)
-            fk = flat_k.at[flat].set(k[:, 0], mode="drop")
-            fv = flat_v.at[flat].set(v[:, 0], mode="drop")
-            ck = fk.reshape(nb, bs_, cfg.n_kv_heads, cfg.head_dim)
-            cv = fv.reshape(nb, bs_, cfg.n_kv_heads, cfg.head_dim)
+            ck, cv = paged_kv_update(cache["k"], cache["v"], k, v,
+                                     block_table, posv,
+                                     use_kernel=use_kernel)
             o = paged_attention(q, ck, cv, block_table, causal=False,
                                 q_offset=posv,
                                 kv_len=jnp.minimum(posv + 1, mb * bs_),
@@ -295,15 +292,9 @@ def _attn_block_apply(
             assert b == 1, "paged chunked prefill is per-slot (batch 1)"
             cl = (chunk_len if chunk_len is not None
                   else jnp.asarray(t, jnp.int32))
-            i = jnp.arange(t)
-            wpos = pos + i
-            blk = block_table[0][jnp.clip(wpos // bs_, 0, mb - 1)]
-            flat = jnp.where((i < cl) & (blk >= 0),
-                             blk * bs_ + wpos % bs_, nb * bs_)
-            fk = flat_k.at[flat].set(k[0], mode="drop")
-            fv = flat_v.at[flat].set(v[0], mode="drop")
-            ck = fk.reshape(nb, bs_, cfg.n_kv_heads, cfg.head_dim)
-            cv = fv.reshape(nb, bs_, cfg.n_kv_heads, cfg.head_dim)
+            ck, cv = paged_kv_update(cache["k"], cache["v"], k, v,
+                                     block_table, pos, cl,
+                                     use_kernel=use_kernel)
             o = paged_attention(q, ck, cv, block_table, causal=True,
                                 q_offset=pos, kv_len=pos + cl,
                                 chunk=cfg.attn_chunk,

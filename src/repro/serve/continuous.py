@@ -90,6 +90,14 @@ class ContinuousConfig:
     eos_token: int = -1       # -1 → never stop early
     seed: int = 0
     max_iters: int = 100_000  # scheduler-loop safety valve
+    fused_step: bool = True
+    # one-dispatch iterations: the active request's prefill chunk AND the
+    # slot-batched decode run as a SINGLE compiled step program per shape
+    # bucket (metrics["dispatches_per_iteration"] == 1 on clean runs).
+    # False restores the legacy two-program split (prefill then decode) —
+    # token-identical under greedy sampling; under temperature > 0 the
+    # sampling-key split order differs on same-iteration prefill→decode
+    # handoffs.  Overridable via REPRO_FUSED_STEP=0/1.
     # --- paged KV allocation (serve/paged.py) ---
     paged: bool = True        # auto-disabled where no full-attn KV exists
     block_size: int = 16      # KV rows per block
@@ -166,7 +174,15 @@ class Request:
 
 
 def _dyadic_sizes(length: int, cap: int) -> List[int]:
-    """Descending powers of two ≤ cap summing to length (exact chunks)."""
+    """Non-increasing powers of two ≤ cap summing exactly to length.
+
+    ``length <= 0`` returns ``[]``: without the guard the inner halving
+    loop decays ``c`` to 0 and ``rem -= 0`` spins forever.  A zero
+    remainder is reachable — a cancel/timeout can land between scheduling
+    and prefill — so this must terminate, and ``_next_chunk`` must treat
+    the empty ladder as "nothing to prefill" rather than index into it."""
+    if length <= 0:
+        return []
     sizes = []
     c = 1
     while c * 2 <= cap:
@@ -280,8 +296,14 @@ class ContinuousServingEngine:
         self._free_slots = list(range(cfg.num_slots))
         self._slot_req: List[Optional[Request]] = [None] * cfg.num_slots
         self.cache = None                      # built lazily per params
-        self.trace_counts: Dict[str, int] = {"prefill": 0, "decode": 0}
+        self.trace_counts: Dict[str, int] = {}
         self.metrics: Dict[str, Any] = {}
+        # one-dispatch iterations (cfg.fused_step, env-overridable so the
+        # chaos-smoke CI matrix can pin either path without code changes)
+        env = os.environ.get("REPRO_FUSED_STEP")
+        self.fused_step = (env != "0") if env is not None else cfg.fused_step
+        self.dispatches = 0       # compiled-program launches (incl. oracle)
+        self.work_iterations = 0  # iterations that dispatched any program
         self._it = 0                           # scheduler-iteration clock
         self._key = None                       # sampling PRNG (run-owned)
         self._last_progress = 0                # watchdog bookkeeping
@@ -352,6 +374,73 @@ class ContinuousServingEngine:
             make_prefill_fn(DENSE, "prefill_replay_oracle"))
         self._decode_oracle_jit = jax.jit(
             make_decode_fn(DENSE, "decode_oracle"))
+
+        # ---- one-dispatch iterations: a single hybrid step program per
+        # shape bucket runs the active request's prefill chunk AND the
+        # slot-batched decode in one compiled dispatch.  Buckets are keyed
+        # (replay, has_prefill, has_decode) — static phase presence, so an
+        # idle phase costs nothing in the lowered program.  The prefill
+        # half writes its chunk KV first; the decode half then reads the
+        # already-updated cache, exactly like the legacy two-program order
+        # within an iteration.  Both halves share one ``fault`` operand
+        # and fold into one all-finite ``ok`` verdict (inactive decode
+        # rows masked), so the degradation ladder re-runs the WHOLE step
+        # on the oracle twin.
+        def make_step_fn(pf_policy, dec_policy, count_key,
+                         has_prefill, has_decode):
+            def step_fn(params, cache, slot, tokens, chunk_len, extras,
+                        toks, active, pkey, dkey, fault):
+                # runs at trace time only
+                self.trace_counts[count_key] = \
+                    self.trace_counts.get(count_key, 0) + 1
+                ok = jnp.asarray(True)
+                ptok = jnp.asarray(0, jnp.int32)
+                if has_prefill:
+                    sub = slot_ops.slice_slot(cache, slot, self._spec)
+                    batch = {"tokens": tokens, "chunk_len": chunk_len,
+                             **extras}
+                    p_logits, sub = self.model.prefill_chunk(
+                        params, batch, sub, policy=pf_policy)
+                    p_logits = p_logits[0] + fault
+                    ok = ok & jnp.all(jnp.isfinite(p_logits))
+                    cache = slot_ops.write_slot(cache, slot, sub,
+                                                self._spec)
+                    ptok = self._sample(p_logits, pkey)
+                nxt = toks
+                if has_decode:
+                    d_logits, new_cache = self.model.decode_step(
+                        params, toks[:, None], cache, policy=dec_policy)
+                    d_logits = d_logits + fault
+                    cache = slot_ops.where_active(active, new_cache, cache,
+                                                  self._spec)
+                    # inactive slots may legitimately hold junk logits —
+                    # only active rows gate the degradation ladder
+                    ok = ok & jnp.all(
+                        jnp.isfinite(d_logits)
+                        | ~active.reshape(active.shape[0],
+                                          *([1] * (d_logits.ndim - 1))))
+                    nxt = jnp.where(active, self._sample(d_logits, dkey),
+                                    toks)
+                return ptok, nxt, cache, ok
+            return step_fn
+
+        # raw (unjitted) step fns are kept for the jaxpr pins in tests
+        self._step_raw: Dict[tuple, Callable] = {}
+        self._step_jits: Dict[tuple, Callable] = {}
+        self._step_oracle_jits: Dict[tuple, Callable] = {}
+        for replay, hp, hd in ((False, True, False), (False, True, True),
+                               (False, False, True), (True, True, False),
+                               (True, True, True)):
+            name = "step" + ("_replay" if replay else
+                             ("_prefill" if hp else "")) \
+                + ("_decode" if hd else "")
+            pf = dense if replay else policy
+            opf = DENSE if replay else opolicy
+            key = (replay, hp, hd)
+            self._step_raw[key] = make_step_fn(pf, dense, name, hp, hd)
+            self._step_jits[key] = jax.jit(self._step_raw[key])
+            self._step_oracle_jits[key] = jax.jit(
+                make_step_fn(opf, DENSE, name + "_oracle", hp, hd))
 
     # ------------------------------------------------------------- sampling
     def _sample(self, logits, key):
@@ -425,6 +514,11 @@ class ContinuousServingEngine:
                 req.slot = -1
         req.state = state
         req.done_iter = it
+        # terminal latency is still wall-clock since arrival — evicted
+        # requests (cancelled / timed out / rejected) otherwise report the
+        # -1.0 dataclass default as their latency_s
+        if req.arrival_time >= 0:
+            req.done_time = time.perf_counter() - req.arrival_time
         req.filled = 0
         req.kv_len = 0
 
@@ -739,10 +833,16 @@ class ContinuousServingEngine:
         """(tokens (1, C), chunk_len, send_extras, is_replay) for the next
         chunk.  Chunks never span the prompt/emitted boundary, so a replay
         chunk (re-ingesting emitted tokens after a preemption) is entirely
-        replay and runs through the dense program."""
+        replay and runs through the dense program.
+
+        Returns the ``(None, 0, False, False)`` sentinel when nothing
+        remains to ingest — a fully-filled request momentarily parked in
+        PREFILL must not index into an empty dyadic ladder."""
         c = self.cfg.chunk_size
         seq = self._seq(req)
         rem = len(seq) - req.filled
+        if rem <= 0:
+            return None, 0, False, False
         if req.filled < len(req.tokens):
             rem = min(rem, len(req.tokens) - req.filled)
             replay = False
@@ -760,6 +860,8 @@ class ContinuousServingEngine:
     def _prefill_one(self, params, req: Request, extras: Dict, it: int,
                      t0: float, key) -> None:
         tokens, clen, first, replay = self._next_chunk(req)
+        if tokens is None:
+            return
         ex = extras if first else {}
         self._sync_table()
         kind = self._fire("prefill")
@@ -769,6 +871,7 @@ class ContinuousServingEngine:
         fn = self._prefill_replay_jit if replay else self._prefill_jit
         args = (params, self.cache, jnp.asarray(req.slot, jnp.int32),
                 jnp.asarray(tokens), jnp.asarray(clen, jnp.int32), ex)
+        self.dispatches += 1
         try:
             logits, new_cache, ok = fn(*args, fault)
             ok = bool(ok)
@@ -783,6 +886,7 @@ class ContinuousServingEngine:
             self.degraded_iterations += 1
             ofn = (self._prefill_replay_oracle_jit if replay
                    else self._prefill_oracle_jit)
+            self.dispatches += 1
             logits, new_cache, ok = ofn(*args, jnp.float32(0.0))
             assert bool(ok), "oracle prefill produced non-finite logits"
         self.cache = new_cache
@@ -813,6 +917,7 @@ class ContinuousServingEngine:
             raise EngineCrash(f"injected crash in decode (it={it})")
         fault = jnp.float32(np.nan if kind == "nonfinite" else 0.0)
         args = (params, self.cache, jnp.asarray(toks), jnp.asarray(act), key)
+        self.dispatches += 1
         try:
             nxt, new_cache, ok = self._decode_jit(*args, fault)
             ok = bool(ok)
@@ -823,6 +928,7 @@ class ContinuousServingEngine:
             # silently yields token 0, so tokens alone cannot reveal the
             # fault — the program's ``ok`` verdict gates instead)
             self.degraded_iterations += 1
+            self.dispatches += 1
             nxt, new_cache, ok = self._decode_oracle_jit(
                 *args, jnp.float32(0.0))
             assert bool(ok), "oracle decode produced non-finite logits"
@@ -835,6 +941,117 @@ class ContinuousServingEngine:
             r.cur = tok
             if tok == self.cfg.eos_token or len(r.out) >= r.max_new_tokens:
                 self._finish(r, it, t0)
+
+    def _step_all(self, params, extras: Dict[int, Dict], it: int,
+                  t0: float) -> bool:
+        """One-dispatch iteration: the active request's prefill chunk and
+        the slot-batched decode run in a SINGLE compiled step program
+        (bucketed by (replay, has_prefill, has_decode) — static phase
+        presence keeps idle halves out of the lowered program).  Returns
+        whether any model work ran this iteration.
+
+        Identical host bookkeeping to the legacy ``_prefill_one`` +
+        ``_decode_all`` pair, with one scheduling difference: a request
+        whose final chunk lands this iteration starts decoding NEXT
+        iteration (the decode roster is frozen before dispatch), where
+        the legacy path recomputed the roster after prefill.  Greedy
+        token streams are identical; see ``ContinuousConfig.fused_step``
+        for the temperature>0 caveat."""
+        prefilling = [r for r in self.requests if r.state == PREFILL]
+        decoding = [r for r in self.requests if r.state == DECODE]
+        req = prefilling[0] if prefilling else None
+        tokens = None
+        clen, first, replay = 0, False, False
+        if req is not None:
+            tokens, clen, first, replay = self._next_chunk(req)
+            if tokens is None:     # fully ingested, parked — nothing to run
+                req = None
+        has_p = req is not None
+        has_d = bool(decoding)
+        if not (has_p or has_d):
+            return False
+        self._sync_table()
+        # both legacy fault sites still fire (chaos schedules target them
+        # by name); either hit folds into the step's shared fault operand,
+        # so a single fault degrades the WHOLE fused step to the oracle —
+        # exactly the blast radius of one compiled program
+        fault_val = 0.0
+        if has_p:
+            kind = self._fire("prefill")
+            if kind == "crash":
+                raise EngineCrash(f"injected crash in prefill (it={it})")
+            if kind == "nonfinite":
+                fault_val = float("nan")
+        if has_d:
+            kind = self._fire("decode")
+            if kind == "crash":
+                raise EngineCrash(f"injected crash in decode (it={it})")
+            if kind == "nonfinite":
+                fault_val = float("nan")
+        fault = jnp.float32(fault_val)
+        # key-split order matches the legacy path (prefill, then decode)
+        pkey = dkey = jnp.zeros((2,), jnp.uint32)   # placeholder operands
+        if has_p:
+            self._key, pkey = jax.random.split(self._key)
+        if has_d:
+            self._key, dkey = jax.random.split(self._key)
+        toks = np.zeros((self.cfg.num_slots,), np.int32)
+        act = np.zeros((self.cfg.num_slots,), bool)
+        for r in decoding:
+            toks[r.slot], act[r.slot] = r.cur, True
+        if has_p:
+            ex = extras.get(req.rid, {}) if first else {}
+            slot = jnp.asarray(req.slot, jnp.int32)
+            ptoks = jnp.asarray(tokens)
+            pclen = jnp.asarray(clen, jnp.int32)
+        else:
+            ex = {}
+            slot = jnp.asarray(0, jnp.int32)
+            ptoks = jnp.zeros((1, 1), jnp.int32)
+            pclen = jnp.asarray(0, jnp.int32)
+        bucket = (replay, has_p, has_d)
+        args = (params, self.cache, slot, ptoks, pclen, ex,
+                jnp.asarray(toks), jnp.asarray(act), pkey, dkey)
+        self.dispatches += 1
+        try:
+            ptok, nxt, new_cache, ok = self._step_jits[bucket](*args, fault)
+            ok = bool(ok)
+        except KernelFault:
+            ok = False     # trace aborted before any output was cached
+        if not ok:
+            # degradation ladder: one oracle re-run replaces the one
+            # faulted dispatch — same operands, zero fault
+            self.degraded_iterations += 1
+            self.dispatches += 1
+            ptok, nxt, new_cache, ok = self._step_oracle_jits[bucket](
+                *args, jnp.float32(0.0))
+            assert bool(ok), "oracle step produced non-finite logits"
+        self.cache = new_cache
+        if has_p:
+            req.filled += clen
+            req.kv_len += clen
+            self._register_blocks(req)
+            if req.filled == len(self._seq(req)):   # seq ingested: sample
+                tok = int(ptok)
+                req.out.append(tok)
+                if req.first_token_iter < 0:
+                    req.first_token_iter = it
+                if (tok == self.cfg.eos_token
+                        or len(req.out) >= req.max_new_tokens):
+                    self._finish(req, it, t0)
+                else:
+                    req.state, req.cur = DECODE, tok
+        if has_d:
+            nxt = np.asarray(nxt)
+            for r in decoding:
+                r.kv_len += 1
+                tok = int(nxt[r.slot])
+                r.out.append(tok)
+                r.cur = tok
+                if (tok == self.cfg.eos_token
+                        or len(r.out) >= r.max_new_tokens):
+                    self._finish(r, it, t0)
+        return True
 
     # ------------------------------------------------------------ main loop
     def run(self, params, extras: Optional[Dict[int, Dict]] = None) -> Dict:
@@ -864,6 +1081,7 @@ class ContinuousServingEngine:
         degraded0, retries0 = self.degraded_iterations, self.admission_retries
         wdog0, timeout0 = self.watchdog_trips, self.timeouts
         cancel0 = self.cancellations
+        disp0, work0 = self.dispatches, self.work_iterations
         if self.paged:
             self.pool.peak_in_use = self.pool.in_use   # per-run peak
             evict0 = self.pool.evictions
@@ -886,23 +1104,41 @@ class ContinuousServingEngine:
                     self.last_snapshot = self.snapshot()
                 now = time.perf_counter()
                 for r in self.requests:  # anchor wall-clock latency at arrival
-                    if (r.state == WAITING and r.arrival <= it
-                            and r.arrival_time < 0):
+                    # stamped unconditionally on visibility, NOT gated on
+                    # WAITING: a request admitted the same iteration it
+                    # became visible would otherwise keep the -1.0 default
+                    # and report garbage latency
+                    if r.arrival <= it and r.arrival_time < 0:
                         r.arrival_time = now
                 reaped = self._reap(it)
                 admitted = self._admit(it)
-                prefilling = [r for r in self.requests if r.state == PREFILL]
-                if prefilling:
-                    self._key, sub = jax.random.split(self._key)
-                    req = prefilling[0]
-                    self._prefill_one(params, req, extras.get(req.rid, {}),
-                                      it, t0, sub)
-                if self.paged:
-                    self._ensure_decode_blocks()
-                decoding = [r for r in self.requests if r.state == DECODE]
-                if decoding:
-                    self._key, sub = jax.random.split(self._key)
-                    self._decode_all(params, decoding, it, t0, sub)
+                if self.fused_step:
+                    # block grab moves BEFORE the dispatch: the fused
+                    # program reads the final roster/table, and a dry-pool
+                    # preemption can still unwind the prefilling request
+                    # ahead of its chunk
+                    if self.paged:
+                        self._ensure_decode_blocks()
+                    worked = self._step_all(params, extras, it, t0)
+                else:
+                    prefilling = [r for r in self.requests
+                                  if r.state == PREFILL]
+                    if prefilling:
+                        self._key, sub = jax.random.split(self._key)
+                        req = prefilling[0]
+                        self._prefill_one(params, req,
+                                          extras.get(req.rid, {}),
+                                          it, t0, sub)
+                    if self.paged:
+                        self._ensure_decode_blocks()
+                    decoding = [r for r in self.requests
+                                if r.state == DECODE]
+                    if decoding:
+                        self._key, sub = jax.random.split(self._key)
+                        self._decode_all(params, decoding, it, t0, sub)
+                    worked = bool(prefilling or decoding)
+                if worked:
+                    self.work_iterations += 1
                 if self.paged and self._validate:
                     self._audit_pool()
                 # no-progress watchdog: clean scheduling always advances
@@ -910,8 +1146,7 @@ class ContinuousServingEngine:
                 # so a stall with admission-eligible waiters only arises
                 # under persistent faults — force-reject the oldest stuck
                 # request instead of livelocking until max_iters
-                progressed = bool(reaped or admitted or prefilling
-                                  or decoding)
+                progressed = bool(reaped or admitted or worked)
                 pending = [r for r in self.requests
                            if r.state == WAITING and r.arrival <= it]
                 if progressed or not pending:
@@ -934,6 +1169,13 @@ class ContinuousServingEngine:
             "generated_tokens": gen,
             "tokens_per_s": gen / max(wall, 1e-9),
             "trace_counts": dict(self.trace_counts),
+            # compiled-program launches per iteration that ran model work
+            # (oracle re-runs included) — 1.0 on a clean fused run, ~2 on
+            # the legacy two-program split when prefill+decode overlap
+            "dispatches": self.dispatches - disp0,
+            "dispatches_per_iteration": (
+                (self.dispatches - disp0)
+                / max(self.work_iterations - work0, 1)),
             "degraded_iterations": self.degraded_iterations - degraded0,
             "lifecycle": {
                 "terminal_states": {

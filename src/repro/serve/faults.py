@@ -29,6 +29,9 @@ failures that the serving stack consults at **named injection sites**:
                               oracle branch of the dispatch ladder.
   ``kernel.paged_attention``  ``repro.models.attention.paged_attention``
                               dispatch — same kinds as above.
+  ``kernel.paged_scatter``    ``repro.models.attention.paged_kv_update``
+                              dispatch (in-kernel KV scatter into the pool)
+                              — same kinds as above.
   ==========================  ==================================================
 
 Determinism/replay: a schedule is a list of :class:`FaultSpec` entries,
@@ -62,6 +65,7 @@ SITES: Tuple[str, ...] = (
     "decode",
     "kernel.projection",
     "kernel.paged_attention",
+    "kernel.paged_scatter",
 )
 
 

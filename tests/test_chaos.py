@@ -237,8 +237,14 @@ def test_nonfinite_output_degrades_to_oracle(tiny, site, calls):
         assert res["outputs"] == base["outputs"], \
             "degraded iterations changed tokens"
         assert res["metrics"]["degraded_iterations"] == len(calls)
-        # the lazily-traced oracle twin compiled exactly once
-        assert eng.trace_counts[f"{site}_oracle"] == 1
+        # the lazily-traced oracle twins compiled exactly once per step
+        # bucket the faulted iterations landed in (fused default: the
+        # whole hybrid step degrades, so the oracle key is the bucket's)
+        oracle = {k: v for k, v in eng.trace_counts.items()
+                  if k.endswith("_oracle")}
+        assert oracle and all(v == 1 for v in oracle.values()), \
+            eng.trace_counts
+        assert len(oracle) <= len(calls)
         _drained(eng)
 
 

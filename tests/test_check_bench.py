@@ -5,7 +5,8 @@ correctness claim says FAIL."""
 import json
 
 from benchmarks.check_bench import (REQUIRED_KERNEL_ROWS, REQUIRED_ROWS,
-                                    REQUIRED_SERVING_ROWS, check_trajectory)
+                                    REQUIRED_SERVING_ROWS, check_regressions,
+                                    check_trajectory, main)
 
 
 def _run(rows):
@@ -94,3 +95,56 @@ def test_unreadable_or_empty_fails(tmp_path):
     assert check_trajectory(str(p))
     p.write_text("[]")
     assert check_trajectory(str(p))
+
+
+# ------------------------- latest-vs-previous regression gate (ISSUE 7)
+
+def _two_runs(prev_us, cur_us):
+    prev = _run(_healthy_rows())[0]
+    cur = _run(_healthy_rows())[0]
+    prev["rows"][0]["us_per_call"] = prev_us
+    cur["rows"][0]["us_per_call"] = cur_us
+    return [prev, cur]
+
+
+def test_regression_beyond_threshold_flagged(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps(_two_runs(10.0, 16.0)))   # +60% > 50%
+    probs = check_regressions(str(p))
+    assert len(probs) == 1 and "+60%" in probs[0], probs
+    # ...and fails main() unless --no-regress-gate demotes it
+    assert main(["check_bench.py", str(p)]) == 1
+    assert main(["check_bench.py", str(p), "--no-regress-gate"]) == 0
+
+
+def test_within_threshold_passes(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps(_two_runs(10.0, 14.0)))   # +40% < 50%
+    assert check_regressions(str(p)) == []
+    assert main(["check_bench.py", str(p)]) == 0
+
+
+def test_threshold_is_configurable(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps(_two_runs(10.0, 14.0)))
+    assert check_regressions(str(p), threshold=0.25)
+    assert main(["check_bench.py", str(p), "--threshold", "0.25"]) == 1
+    assert check_regressions(str(p), threshold=1.0) == []
+
+
+def test_single_run_has_nothing_to_compare(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps(_run(_healthy_rows())))
+    assert check_regressions(str(p)) == []
+
+
+def test_new_and_vanished_rows_not_regression_compared(tmp_path):
+    """Row-set churn is the required-row scan's job; the regression gate
+    only compares names present in BOTH runs."""
+    prev = _run(_healthy_rows())[0]
+    cur = _run(_healthy_rows())[0]
+    prev["rows"] = prev["rows"][:-1]               # row added in cur
+    cur["rows"][0]["name"] = "kernel/renamed/1"    # row vanished from cur
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps([prev, cur]))
+    assert check_regressions(str(p)) == []

@@ -122,7 +122,27 @@ def test_single_trace_per_bucket(tiny):
     eng, res = _serve(model, params, DENSE, prompts,
                       [0, 0, 1, 2, 5, 9], [5] * len(lens),
                       slots=3, chunk=16)
+    # fused one-dispatch default: ONE compiled step program per
+    # (prefill?, decode?) phase-presence bucket, each traced exactly once
+    assert eng.trace_counts == {"step_prefill": 1, "step_decode": 1,
+                                "step_prefill_decode": 1}, eng.trace_counts
+    assert res["metrics"]["dispatches_per_iteration"] == 1.0
+    assert all(len(res["outputs"][i]) == 5 for i in range(len(lens)))
+
+
+def test_single_trace_per_bucket_legacy(tiny):
+    """Same stream through the legacy two-program split (fused_step=False):
+    the original per-phase pins still hold."""
+    cfg, model, params = tiny
+    lens = [3, 9, 14, 23, 31, 6]
+    prompts = _prompts(cfg, lens, seed0=70)
+    eng = ContinuousServingEngine(model, DENSE, ContinuousConfig(
+        max_seq=MAX_SEQ, num_slots=3, chunk_size=16, fused_step=False))
+    for p, a in zip(prompts, [0, 0, 1, 2, 5, 9]):
+        eng.submit(p, max_new_tokens=5, arrival=a)
+    res = eng.run(params)
     assert eng.trace_counts == {"prefill": 1, "decode": 1}, eng.trace_counts
+    assert res["metrics"]["dispatches_per_iteration"] > 1.0
     assert all(len(res["outputs"][i]) == 5 for i in range(len(lens)))
 
 
@@ -139,6 +159,8 @@ def test_recurrent_arch_dyadic_chunks():
     for i, p in enumerate(prompts):
         assert res["outputs"][i] == _oracle(model, params, DENSE, p,
                                             max_new[i]), f"request {i}"
-    # dyadic ladder: at most log2(chunk)+1 prefill shapes, one decode shape
-    assert eng.trace_counts["prefill"] <= 4
-    assert eng.trace_counts["decode"] == 1
+    # dyadic ladder: at most log2(chunk)+1 prefill shapes per step bucket,
+    # one decode-only shape
+    pf = sum(v for k, v in eng.trace_counts.items() if "prefill" in k)
+    assert pf <= 8, eng.trace_counts
+    assert eng.trace_counts.get("step_decode", 0) <= 1, eng.trace_counts

@@ -176,7 +176,9 @@ def test_shared_system_prompt_skips_prefill_token_identical(
     # ≥50% of the reusing requests' prompt rows came from the index
     reused_prompt_rows = sum(len(prompts[r]) for r in (1, 2, 3))
     assert pg["tokens_skipped"] / reused_prompt_rows >= 0.5
-    assert eng.pool.in_use == 0 and eng.trace_counts["prefill"] == 1
+    assert eng.pool.in_use == 0
+    # one step program per phase-presence bucket (fused default)
+    assert all(v == 1 for v in eng.trace_counts.values()), eng.trace_counts
 
 
 def test_preemption_replay_rematches_its_own_blocks(tiny):
