@@ -45,6 +45,9 @@ REQUIRED_SERVING_ROWS = (
     # fused one-dispatch step vs the legacy two-program split; derived
     # embeds the token-identity verdict and dispatches_per_iteration
     "serving/one_dispatch",
+    # dp=2 router-sharded serving: derived embeds per-replica dpi and the
+    # token-identity-vs-dp1 verdict
+    "serving/sharded_dp2",
 )
 REQUIRED_ROWS = REQUIRED_KERNEL_ROWS + REQUIRED_SERVING_ROWS
 

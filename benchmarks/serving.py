@@ -23,6 +23,7 @@ import numpy as np
 
 from benchmarks.common import build_eval_model, csv_row, with_scales
 from repro.core.policy import paper_policy
+from repro.serve.api import Engine, EngineConfig
 from repro.serve.continuous import ContinuousConfig, ContinuousServingEngine
 from repro.serve.engine import ServeConfig, ServingEngine
 
@@ -57,7 +58,7 @@ def run() -> list[str]:
 
     # --- continuous scheduler over the staggered stream -------------------
     eng = ContinuousServingEngine(model, policy, ContinuousConfig(
-        max_seq=_MAX_SEQ, num_slots=3, chunk_size=16))
+        max_seq=_MAX_SEQ, num_slots=3, chunk_size=16), _via_api=True)
     res = warmed_run(eng)
     m = res["metrics"]
     cont_us = m["wall_s"] / max(m["generated_tokens"], 1) * 1e6
@@ -74,7 +75,8 @@ def run() -> list[str]:
     # the fused engine above must emit identical greedy tokens at exactly
     # one compiled dispatch per work iteration
     legacy = ContinuousServingEngine(model, policy, ContinuousConfig(
-        max_seq=_MAX_SEQ, num_slots=3, chunk_size=16, fused_step=False))
+        max_seq=_MAX_SEQ, num_slots=3, chunk_size=16, fused_step=False),
+        _via_api=True)
     lres = warmed_run(legacy)
     lm = lres["metrics"]
     identical = lres["outputs"] == res["outputs"]
@@ -88,6 +90,29 @@ def run() -> list[str]:
         f"one_dispatch={'PASS' if one_dispatch else 'FAIL'};"
         f"token_identity={'PASS' if identical else 'FAIL'}"))
 
+    # --- dp=2 sharded serving through the Router/api facade ---------------
+    # the same staggered stream load-balanced across two host-level engine
+    # replicas (independent schedulers + block pools).  Gates: outputs
+    # token-identical to the single-replica run above, and each replica
+    # keeps the fused one-dispatch property (dpi ≤ the single-engine
+    # baseline — sharding must not reintroduce extra dispatches)
+    sharded = Engine.from_config(model, EngineConfig(
+        dp=2, serving=ContinuousConfig(max_seq=_MAX_SEQ, num_slots=3,
+                                       chunk_size=16)), policy=policy)
+    sres = warmed_run(sharded)
+    sm = sharded.metrics
+    shard_us = sm.wall_s / max(sm.generated_tokens, 1) * 1e6
+    identical = sres["outputs"] == res["outputs"]
+    rep_dpi = [p.dispatches_per_iteration for p in sm.replicas]
+    dpi_ok = max(rep_dpi) <= m["dispatches_per_iteration"]
+    rows.append(csv_row(
+        "serving/sharded_dp2", shard_us,
+        f"tok_s={sm.tokens_per_s:.1f};"
+        f"replica_dpi={'/'.join(f'{d:.2f}' for d in rep_dpi)};"
+        f"replica_tok={'/'.join(str(p.generated_tokens) for p in sm.replicas)};"
+        f"per_replica_one_dispatch={'PASS' if dpi_ok else 'FAIL'};"
+        f"token_identity_vs_dp1={'PASS' if identical else 'FAIL'}"))
+
     # --- same traffic under memory pressure: 50% block pool ---------------
     # the paged allocator's reason to exist — serve the identical stream
     # with the pool sized well below num_slots * max_seq and check the
@@ -97,7 +122,7 @@ def run() -> list[str]:
     half_pool = (3 * _MAX_SEQ) // (2 * bs)
     press = ContinuousServingEngine(model, policy, ContinuousConfig(
         max_seq=_MAX_SEQ, num_slots=3, chunk_size=16,
-        block_size=bs, num_blocks=half_pool))
+        block_size=bs, num_blocks=half_pool), _via_api=True)
     pres = warmed_run(press)
     pm = pres["metrics"]
     pg = pm["paged"]
@@ -134,7 +159,7 @@ def run() -> list[str]:
     def shared_run(prefix_cache):
         eng = ContinuousServingEngine(model, policy, ContinuousConfig(
             max_seq=_MAX_SEQ, num_slots=3, chunk_size=16, block_size=8,
-            prefix_cache=prefix_cache))
+            prefix_cache=prefix_cache), _via_api=True)
         for _ in range(2):              # warmup compiles AND warms the index
             eng.clear()
             for p, a in zip(shared_prompts, shared_arrivals):
@@ -168,7 +193,8 @@ def run() -> list[str]:
                             "paging auto-disabled for this arch;SKIP"))
 
     # --- legacy one-shot engine, one request at a time --------------------
-    one = ServingEngine(model, policy, ServeConfig(max_seq=_MAX_SEQ))
+    one = ServingEngine(model, policy, ServeConfig(max_seq=_MAX_SEQ),
+                        _via_api=True)
 
     def oneshot_sweep():
         n = 0

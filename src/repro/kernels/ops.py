@@ -20,6 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import tp as tp_mod
 from repro.kernels.nm_prune import nm_prune_pallas
 from repro.kernels.nm_prune_matmul import nm_prune_matmul_pallas
 from repro.kernels.nm_spmm import nm_spmm_pallas
@@ -129,6 +130,17 @@ def nm_prune_matmul(
     ``bias`` (``(N_out,)``) is folded into the kernel epilogue — the add
     happens on the hot f32 accumulator instead of a separate HBM pass."""
     interpret = default_interpret() if interpret is None else interpret
+    # tensor parallelism (distributed/tp.py): under an active TP scope the
+    # call re-enters itself column-parallel — each device runs this same
+    # wrapper on its N_out slice (scope suspended inside the shard body),
+    # and the gathered result is bit-identical to the unsharded call
+    y = tp_mod.column_parallel(
+        lambda w_, b_: nm_prune_matmul(x, w_, scale, n, m, bias=b_,
+                                       block_t=block_t, block_o=block_o,
+                                       block_k=block_k, interpret=interpret),
+        (w, bias))
+    if y is not None:
+        return y
     xf, lead = _flatten(x)
     t, d = xf.shape
     n_out = w.shape[-1]
@@ -167,6 +179,15 @@ def nm_spmm(
     divisor (which would change which tokens vote in each pool).
     """
     interpret = default_interpret() if interpret is None else interpret
+    # column-parallel TP: the consensus vote runs over the full (replicated)
+    # activations/K axis on every device, so sharding N_out cannot change
+    # which channels win — outputs stay bit-identical
+    y = tp_mod.column_parallel(
+        lambda w_: nm_spmm(x, w_, scale, n, m, tile=tile, block_o=block_o,
+                           block_k=block_k, interpret=interpret),
+        (w,))
+    if y is not None:
+        return y
     xf, lead = _flatten(x)
     t, d = xf.shape
     n_out = w.shape[-1]
@@ -211,6 +232,16 @@ def osparse_matmul(
     interpret = default_interpret() if interpret is None else interpret
     if not prune:
         n = m = 1  # no selection → no channel-group divisibility constraint
+    # column-parallel TP: wq/w_scale/bias are N_out-aligned and shard;
+    # smooth/amber/act_scale are K- or token-aligned and replicate
+    y = tp_mod.column_parallel(
+        lambda wq_, ws_, b_: osparse_matmul(
+            x, wq_, smooth, amber, ws_, n, m, act_scale=act_scale, bias=b_,
+            prune=prune, per_token=per_token, block_t=block_t,
+            block_o=block_o, block_k=block_k, interpret=interpret),
+        (wq, w_scale, bias))
+    if y is not None:
+        return y
     xf, lead = _flatten(x)
     t, d = xf.shape
     n_out = wq.shape[-1]
@@ -241,6 +272,12 @@ def w8a8_matmul(
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     interpret = default_interpret() if interpret is None else interpret
+    y = tp_mod.column_parallel(
+        lambda wq_, ws_: w8a8_matmul(xq, wq_, x_scale, ws_,
+                                     interpret=interpret),
+        (wq, w_scale))
+    if y is not None:
+        return y
     xf, lead = _flatten(xq)
     t, d = xf.shape
     n_out = wq.shape[-1]

@@ -6,10 +6,12 @@ and only then calls these.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 
 __all__ = ["make_production_mesh", "make_local_mesh", "make_mesh_auto",
-           "abstract_mesh"]
+           "make_serving_mesh", "abstract_mesh"]
 
 
 def make_mesh_auto(shape, axes):
@@ -19,7 +21,20 @@ def make_mesh_auto(shape, axes):
     for the explicit-sharding mode; Auto is both the new default and the
     only behaviour older versions have, so falling back to the bare call
     is semantically identical.
+
+    Raises ValueError up front when the mesh asks for more devices than
+    the backend exposes — ``jax.make_mesh``'s own error talks about array
+    reshapes, which buries the actual fix (fewer dp/tp replicas, or more
+    fake host devices via XLA_FLAGS).
     """
+    want = math.prod(shape)
+    have = len(jax.devices())
+    if want > have:
+        raise ValueError(
+            f"mesh {dict(zip(axes, shape))} needs {want} devices but the "
+            f"backend has {have}; lower dp/tp or export "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={want} "
+            "BEFORE the first jax call to fake host devices")
     axis_type = getattr(jax.sharding, "AxisType", None)
     if axis_type is not None:
         try:
@@ -50,6 +65,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return make_mesh_auto(shape, axes)
+
+
+def make_serving_mesh(dp: int = 1, tp: int = 1):
+    """``(dp, tp)`` serving mesh with the ("data", "model") axes the
+    sharded serving stack expects: the Router slices it into per-replica
+    TP submeshes (``distributed.tp.replica_meshes``) and runs one engine
+    per ``data`` row.  Validated against the device count up front."""
+    return make_mesh_auto((dp, tp), ("data", "model"))
 
 
 def make_local_mesh():

@@ -64,6 +64,15 @@ def main(argv=None):
                     help="legacy two-program iterations (separate prefill "
                          "and decode dispatches) instead of the fused "
                          "one-dispatch step program")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel engine replicas for --trace "
+                         "(host-level: independent schedulers + block "
+                         "pools behind the admission router)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel shards per replica for --trace; "
+                         "dp*tp > 1 needs that many devices (fake them "
+                         "with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -92,8 +101,10 @@ def main(argv=None):
 
     scfg = ServeConfig(max_seq=args.prompt_len + args.new_tokens + 8,
                        temperature=args.temperature)
-    engine = ServingEngine(model, policy, scfg)
-    dense_engine = ServingEngine(model, DENSE, scfg)
+    # the one-shot batch path stays on the legacy engine (it is the
+    # monolithic-prefill oracle); _via_api marks first-party use
+    engine = ServingEngine(model, policy, scfg, _via_api=True)
+    dense_engine = ServingEngine(model, DENSE, scfg, _via_api=True)
 
     batch = {
         "tokens": jax.random.randint(
@@ -126,12 +137,12 @@ def main(argv=None):
 
 
 def _trace_mode(args, cfg, model, params, policy):
-    """Poisson-arrival request stream through the continuous scheduler."""
+    """Poisson-arrival request stream through the serving facade."""
     import jax
     import numpy as np
 
-    from repro.serve.continuous import (ContinuousConfig,
-                                        ContinuousServingEngine)
+    from repro.serve.api import Engine, EngineConfig
+    from repro.serve.continuous import ContinuousConfig
 
     rng = np.random.default_rng(args.seed)
     lo, hi = (int(x) for x in args.len_range.split(":"))
@@ -141,13 +152,16 @@ def _trace_mode(args, cfg, model, params, policy):
     max_seq = hi + args.new_tokens + 8
 
     max_seq += args.shared_prefix
-    eng = ContinuousServingEngine(model, policy, ContinuousConfig(
-        max_seq=max_seq, num_slots=args.slots, chunk_size=args.chunk,
-        temperature=args.temperature, seed=args.seed,
-        paged=not args.no_paged, block_size=args.block_size,
-        num_blocks=args.num_blocks,
-        prefix_cache=not args.no_prefix_cache,
-        ttl_default=args.ttl, fused_step=not args.no_fused_step))
+    eng = Engine.from_config(model, EngineConfig(
+        dp=args.dp, tp=args.tp,
+        serving=ContinuousConfig(
+            max_seq=max_seq, num_slots=args.slots, chunk_size=args.chunk,
+            temperature=args.temperature, seed=args.seed,
+            paged=not args.no_paged, block_size=args.block_size,
+            num_blocks=args.num_blocks,
+            prefix_cache=not args.no_prefix_cache,
+            ttl_default=args.ttl, fused_step=not args.no_fused_step)),
+        policy=policy)
     sysp = np.asarray(jax.random.randint(
         jax.random.PRNGKey(99), (args.shared_prefix,), 0, cfg.vocab_size))
     extras = {}
@@ -170,64 +184,73 @@ def _trace_mode(args, cfg, model, params, policy):
         if ex:
             extras[rid] = ex
 
-    res = eng.run(params, extras=extras)
-    m = res["metrics"]
+    eng.run(params, extras=extras)
+    m = eng.metrics          # typed MetricsSnapshot (router-merged when dp>1)
     print(f"# {args.num_requests} requests, λ={args.rate}/iter, "
-          f"lens {lo}..{hi}, slots={args.slots}, chunk={args.chunk}")
+          f"lens {lo}..{hi}, slots={args.slots}, chunk={args.chunk}, "
+          f"dp={args.dp}, tp={args.tp} "
+          f"(metrics schema v{m.schema_version})")
     print("rid,prompt_len,arrival,state,first_token_iter,done_iter,"
           "latency_iters,latency_s,n_out,preemptions,retries")
-    for r in m["requests"]:
-        print(f"{r['rid']},{r['prompt_len']},{r['arrival']},{r['state']},"
-              f"{r['first_token_iter']},{r['done_iter']},"
-              f"{r['latency_iters']},{r['latency_s']:.3f},{r['n_out']},"
-              f"{r['preemptions']},{r['retries']}")
-    lat = [r["latency_iters"] for r in m["requests"]]
-    print(f"# throughput: {m['generated_tokens']} tokens in "
-          f"{m['wall_s']:.2f}s = {m['tokens_per_s']:.1f} tok/s "
-          f"over {m['iterations']} iterations")
+    for r in sorted(m.requests, key=lambda r: r.rid):
+        print(f"{r.rid},{r.prompt_len},{r.arrival},{r.state},"
+              f"{r.first_token_iter},{r.done_iter},"
+              f"{r.latency_iters},{r.latency_s:.3f},{r.n_out},"
+              f"{r.preemptions},{r.retries}")
+    lat = [r.latency_iters for r in m.requests]
+    print(f"# throughput: {m.generated_tokens} tokens in "
+          f"{m.wall_s:.2f}s = {m.tokens_per_s:.1f} tok/s "
+          f"over {m.iterations} iterations")
     print(f"# latency iters p50/p95: {int(np.percentile(lat, 50))}/"
           f"{int(np.percentile(lat, 95))}")
-    lc = m["lifecycle"]
-    ts = lc["terminal_states"]
-    print(f"# terminal states: done={ts['done']} rejected={ts['rejected']} "
-          f"timed_out={ts['timed_out']} cancelled={ts['cancelled']}")
-    print(f"# lifecycle: degraded_iterations={m['degraded_iterations']} "
-          f"admission_retries={lc['admission_retries']} "
-          f"watchdog_trips={lc['watchdog_trips']} "
-          f"restores={lc['restores']} faults_fired={lc['faults_fired']}")
+    lc = m.lifecycle
+    ts = lc.terminal_states
+    print(f"# terminal states: done={ts.get('done', 0)} "
+          f"rejected={ts.get('rejected', 0)} "
+          f"timed_out={ts.get('timed_out', 0)} "
+          f"cancelled={ts.get('cancelled', 0)}")
+    print(f"# lifecycle: degraded_iterations={m.degraded_iterations} "
+          f"admission_retries={lc.admission_retries} "
+          f"watchdog_trips={lc.watchdog_trips} "
+          f"restores={lc.restores} faults_fired={lc.faults_fired}")
     terminal = ("done", "rejected", "timed_out", "cancelled")
-    leaked = [r["rid"] for r in m["requests"] if r["state"] not in terminal]
+    leaked = [r.rid for r in m.requests if r.state not in terminal]
     if leaked:
         print(f"# ERROR: {len(leaked)} request(s) leaked in a non-terminal "
               f"state at drain: rids {leaked}")
         return 1
-    tc = ", ".join(f"{k}={v}" for k, v in sorted(m["trace_counts"].items()))
+    tc = ", ".join(f"{k}={v}" for k, v in sorted(m.trace_counts.items()))
     print(f"# traces: {tc} (shape buckets: chunk={args.chunk}, "
           f"decode batch={args.slots})")
-    print(f"# dispatches: {m['dispatches']} programs / "
-          f"{m['iterations']} iterations = "
-          f"{m['dispatches_per_iteration']:.2f} per work iteration "
+    print(f"# dispatches: {m.dispatches} programs / "
+          f"{m.iterations} iterations = "
+          f"{m.dispatches_per_iteration:.2f} per work iteration "
           f"({'fused one-dispatch step' if not args.no_fused_step else 'legacy two-program split'})")
-    pg = m["paged"]
-    if pg["enabled"]:
-        print(f"# paged KV: block_size={pg['block_size']} "
-              f"pool={pg['num_blocks']} blocks "
-              f"({pg['num_blocks'] * pg['block_size']} rows vs "
-              f"{args.slots * max_seq} dense-slab rows); "
-              f"peak_in_use={pg['peak_blocks_in_use']} "
-              f"preemptions={pg['preemptions']} "
-              f"rejections={pg['rejections']}; "
-              f"attention={'pallas block-walk kernel' if pg['attention_kernel'] else 'jnp gather oracle'} "
+    if m.replicas is not None:
+        per = ", ".join(
+            f"r{i}: {p.generated_tokens} tok / {p.iterations} iters / "
+            f"dpi {p.dispatches_per_iteration:.2f}"
+            for i, p in enumerate(m.replicas))
+        print(f"# replicas ({len(m.replicas)}): {per}")
+    pg = m.paged
+    if pg.enabled:
+        print(f"# paged KV: block_size={pg.block_size} "
+              f"pool={pg.num_blocks} blocks "
+              f"({pg.num_blocks * pg.block_size} rows vs "
+              f"{args.slots * max_seq * args.dp} dense-slab rows); "
+              f"peak_in_use={pg.peak_blocks_in_use} "
+              f"preemptions={pg.preemptions} "
+              f"rejections={pg.rejections}; "
+              f"attention={'pallas block-walk kernel' if pg.attention_kernel else 'jnp gather oracle'} "
               f"(toggle: --pallas-kernels)")
-        if pg["prefix_cache"]:
-            pct = (100.0 * pg["tokens_skipped"]
-                   / max(pg["prefill_tokens"], 1))
-            print(f"# prefix cache: hits={pg['prefix_hits']} requests, "
-                  f"blocks_reused={pg['blocks_reused']}, "
-                  f"tokens_skipped={pg['tokens_skipped']}/"
-                  f"{pg['prefill_tokens']} ({pct:.0f}% of prefill rows), "
-                  f"cached_blocks={pg['cached_blocks']}, "
-                  f"evictions={pg['evictions']} "
+        if pg.prefix_cache:
+            pct = (100.0 * pg.tokens_skipped / max(pg.prefill_tokens, 1))
+            print(f"# prefix cache: hits={pg.prefix_hits} requests, "
+                  f"blocks_reused={pg.blocks_reused}, "
+                  f"tokens_skipped={pg.tokens_skipped}/"
+                  f"{pg.prefill_tokens} ({pct:.0f}% of prefill rows), "
+                  f"cached_blocks={pg.cached_blocks}, "
+                  f"evictions={pg.evictions} "
                   f"(--shared-prefix N to exercise; --no-prefix-cache "
                   f"to disable)")
         else:

@@ -307,6 +307,20 @@ def paged_kv_update(
             from repro.kernels.paged_attention import paged_kv_scatter_pallas
 
             interp = default_interpret() if interpret is None else interpret
+
+            def _scatter(kn_, vn_, kp_, vp_, bt_, pos_, cl_):
+                return paged_kv_scatter_pallas(kn_, vn_, kp_, vp_, bt_,
+                                               pos_, cl_, interpret=interp)
+
+            # tensor parallelism (distributed/tp.py): under an active TP
+            # scope the scatter shards over KV heads; the pools come back
+            # gathered so the cache pytree stays replicated between steps
+            from repro.distributed import tp as tp_mod
+            out = tp_mod.head_sharded_scatter(
+                _scatter, k_new, v_new, k_pool, v_pool,
+                (block_table, posv, cl))
+            if out is not None:
+                return out
             return paged_kv_scatter_pallas(k_new, v_new, k_pool, v_pool,
                                            block_table, posv, cl,
                                            interpret=interp)
@@ -382,6 +396,21 @@ def paged_attention(
                 jnp.asarray(q_offset, jnp.int32).reshape(-1), (B,))
             kvl = jnp.broadcast_to(
                 jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,))
+
+            def _kern(q_, kp_, vp_, bt_, qo_, kvl_):
+                return paged_attention_pallas(q_, kp_, vp_, bt_, qo_, kvl_,
+                                              causal=causal,
+                                              block_q=min(128, T),
+                                              interpret=interp)
+
+            # tensor parallelism (distributed/tp.py): under an active TP
+            # scope the kernel shards over KV heads (heads are independent
+            # and the GQA ratio is preserved) — bit-identical outputs
+            from repro.distributed import tp as tp_mod
+            out = tp_mod.head_sharded_attention(
+                _kern, q, k_pool, v_pool, (block_table, qo, kvl))
+            if out is not None:
+                return out
             return paged_attention_pallas(q, k_pool, v_pool, block_table,
                                           qo, kvl, causal=causal,
                                           block_q=min(128, T),

@@ -1,10 +1,36 @@
-from repro.serve.continuous import (ContinuousConfig, ContinuousServingEngine,
-                                    Request)
-from repro.serve.engine import ServeConfig, ServingEngine
-from repro.serve.faults import (EngineCrash, FaultInjector, FaultSpec,
-                                KernelFault)
-from repro.serve.paged import BlockPool
+"""Serving package.  Re-exports are LAZY (PEP 562): the Scheduler layer
+of the scheduler/executor split (``repro.serve.scheduler`` and its deps
+``paged``/``faults``) is pure host code, and an eager ``from .api import
+Engine`` here would drag jax in for anyone importing it — pinned by
+``test_sharded_serving.test_scheduler_layer_is_pure_host``."""
+_EXPORTS = {
+    "Engine": "repro.serve.api",
+    "EngineConfig": "repro.serve.api",
+    "Router": "repro.serve.router",
+    "MetricsSnapshot": "repro.serve.metrics",
+    "ServeConfig": "repro.serve.engine",
+    "ServingEngine": "repro.serve.engine",
+    "ContinuousConfig": "repro.serve.continuous",
+    "ContinuousServingEngine": "repro.serve.continuous",
+    "Request": "repro.serve.continuous",
+    "BlockPool": "repro.serve.paged",
+    "FaultInjector": "repro.serve.faults",
+    "FaultSpec": "repro.serve.faults",
+    "KernelFault": "repro.serve.faults",
+    "EngineCrash": "repro.serve.faults",
+}
 
-__all__ = ["ServeConfig", "ServingEngine", "ContinuousConfig",
-           "ContinuousServingEngine", "Request", "BlockPool",
-           "FaultInjector", "FaultSpec", "KernelFault", "EngineCrash"]
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.serve' has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

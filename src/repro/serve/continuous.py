@@ -26,6 +26,23 @@ iteration:
      step as a single padded batch (inactive slots are masked out of the
      cache update).
 
+Since the scheduler/executor API split this class is a thin **driver**
+composing the two layers (serve/README.md "Architecture"):
+
+* :class:`~repro.serve.scheduler.Scheduler` — every piece of host state
+  (request lifecycles, slots, the block pool, prefix index, watchdog,
+  counters); emits :class:`~repro.serve.scheduler.StepPlan`s and commits
+  their results.  Never touches device arrays.
+* :class:`~repro.serve.executor.Executor` — the cache pytree, the jit'd
+  phase/step programs and their oracle twins, the fault/degradation
+  ladder, and (optionally) a TP mesh that shards the kernels.  Never
+  touches request state.
+
+The driver owns only the run loop, the sampling PRNG, snapshot/restore
+composition, and metrics assembly.  New code should construct engines
+through :class:`repro.serve.api.Engine`; direct construction still works
+(every historical attribute delegates to the right layer) but warns.
+
 Shape buckets: prefill compiles once per chunk shape (a single
 ``chunk_size`` bucket for attention archs; a dyadic ladder of at most
 log2(chunk_size)+1 sizes for archs with recurrent blocks, whose scans
@@ -47,11 +64,11 @@ tile membership (see serve/README.md).
 """
 from __future__ import annotations
 
-import copy
 import dataclasses
 import os
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+import warnings
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -59,26 +76,29 @@ import numpy as np
 
 from repro.core.policy import DENSE, SparsityPolicy
 from repro.serve import faults as fault_mod
-from repro.serve import slots as slot_ops
-from repro.serve.faults import EngineCrash, FaultInjector, KernelFault
-from repro.serve.paged import (BlockPool, chain_block_hashes,
-                               chain_block_keys, init_paged_cache,
-                               max_blocks_per_slot)
+from repro.serve.executor import Executor
+from repro.serve.faults import EngineCrash, FaultInjector
+from repro.serve.metrics import (LifecycleMetrics, MetricsSnapshot,
+                                 PagedMetrics, RequestMetrics)
+from repro.serve.paged import chain_block_hashes, chain_block_keys
+from repro.serve.scheduler import (CANCELLED, DECODE, DONE, PREFILL,
+                                   REJECTED, TERMINAL, TIMED_OUT, WAITING,
+                                   Request, Scheduler, StepPlan,
+                                   _dyadic_sizes)
 
 __all__ = ["ContinuousConfig", "Request", "ContinuousServingEngine"]
 
-WAITING, PREFILL, DECODE, DONE = "waiting", "prefill", "decode", "done"
-# terminal without ever running: admission proved the request can NEVER
-# fit the block pool (its replay sequence outgrew capacity), its transient-
-# failure retry budget ran out, or the no-progress watchdog evicted it —
-# rejecting keeps strict-FCFS admission from waiting on it forever and
-# starving the queue behind it (head-of-line livelock, ISSUE-5 bugfix)
-REJECTED = "rejected"
-# deadline (submit ttl / cfg.ttl_default) passed before completion
-TIMED_OUT = "timed_out"
-# cancel(rid): caller withdrew the request; unwound from any phase
-CANCELLED = "cancelled"
-_TERMINAL = (DONE, REJECTED, TIMED_OUT, CANCELLED)
+# historical module-level names: the lifecycle states and chunk ladder
+# lived here before the scheduler split, and tests/tools import them from
+# this module
+_TERMINAL = TERMINAL
+
+
+def _hash_blocks(*args, **kwargs):
+    # late-bound so the historical patch point keeps working: tests
+    # monkeypatch ``repro.serve.continuous.chain_block_hashes`` and the
+    # scheduler hashes through this shim
+    return chain_block_hashes(*args, **kwargs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,69 +159,19 @@ class ContinuousConfig:
     # with restore() and resume token-identically.  0 = manual snapshots.
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    tokens: np.ndarray                 # (T,) prompt token ids
-    max_new_tokens: int
-    arrival: int = 0                   # scheduler iteration of arrival
-    # --- runtime (engine-owned) ---
-    state: str = WAITING
-    slot: int = -1
-    filled: int = 0                    # seq tokens prefilled so far
-    cur: int = 0                       # last generated token (decode input)
-    out: List[int] = dataclasses.field(default_factory=list)
-    blocks: List[int] = dataclasses.field(default_factory=list)
-    kv_len: int = 0                    # KV rows held (host mirror of pos)
-    shared: int = 0                    # leading blocks reused from the index
-    registered: int = 0                # leading blocks published to the index
-    cached_tokens: int = 0             # prefill rows skipped via prefix hits
-    # memoized chain hashes of this request's full blocks; token content
-    # never changes for an already-hashed block (out only appends), so the
-    # chain survives preemption and extends in O(new blocks)
-    hash_chain: List[int] = dataclasses.field(default_factory=list)
-    preempted: int = 0                 # times requeued by the block pool
-    admitted_iter: int = -1
-    first_token_iter: int = -1
-    done_iter: int = -1
-    arrival_time: float = -1.0         # wall clock when arrival was reached
-    done_time: float = 0.0             # wall-clock latency from arrival
-    # --- lifecycle hardening ---
-    deadline: Optional[int] = None     # absolute iteration bound (TIMED_OUT)
-    cancel_requested: bool = False     # processed at the next iteration start
-    retries: int = 0                   # transient admission failures absorbed
-    next_retry_iter: int = 0           # backoff window after a transient fail
-
-
-def _dyadic_sizes(length: int, cap: int) -> List[int]:
-    """Non-increasing powers of two ≤ cap summing exactly to length.
-
-    ``length <= 0`` returns ``[]``: without the guard the inner halving
-    loop decays ``c`` to 0 and ``rem -= 0`` spins forever.  A zero
-    remainder is reachable — a cancel/timeout can land between scheduling
-    and prefill — so this must terminate, and ``_next_chunk`` must treat
-    the empty ladder as "nothing to prefill" rather than index into it."""
-    if length <= 0:
-        return []
-    sizes = []
-    c = 1
-    while c * 2 <= cap:
-        c *= 2
-    rem = length
-    while rem:
-        while c > rem:
-            c //= 2
-        sizes.append(c)
-        rem -= c
-    return sizes
-
-
 class ContinuousServingEngine:
-    """Scheduler + paged slot cache + shape-bucketed jitted phases."""
+    """Scheduler + Executor driver over a paged slot cache."""
 
     def __init__(self, model, policy: SparsityPolicy = DENSE,
                  cfg: ContinuousConfig = ContinuousConfig(),
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 mesh=None, _via_api: bool = False):
+        if not _via_api:
+            warnings.warn(
+                "constructing ContinuousServingEngine directly is "
+                "deprecated; use repro.serve.api.Engine.from_config "
+                "(serve/README.md has the migration table)",
+                DeprecationWarning, stacklevel=2)
         self.model = model
         self.policy = policy
         self.cfg = cfg
@@ -216,238 +186,117 @@ class ContinuousServingEngine:
         self.iteration_hook: Optional[Callable] = None
         self._validate = (cfg.validate_pool
                           or os.environ.get("REPRO_VALIDATE_POOL") == "1")
-        mcfg = model.cfg
-        if getattr(mcfg, "vision_stub", False):
-            assert cfg.chunk_size >= mcfg.n_patches, (
-                "chunk_size must cover the VLM patch stub "
-                f"({cfg.chunk_size} < {mcfg.n_patches})")
-        # recurrent scans cannot mask padded tokens out of their state, so
-        # hybrid/SSM archs get exact dyadic chunks instead of a padded tail
-        if mcfg.is_encdec:
-            self._exact_chunks = False
-        else:
-            from repro.models.transformer import layer_kinds
-            self._exact_chunks = any(k != "attn" for k in layer_kinds(mcfg))
-        if mcfg.attn_type in ("swa", "local"):
-            assert cfg.chunk_size <= min(mcfg.window, cfg.max_seq), (
-                "chunk_size must fit the sliding-window ring buffer")
-
-        # paged KV: only archs with full-attention KV leaves benefit;
-        # encdec (request-shaped caches), SWA rings, and pure-recurrent
-        # archs fall back to the dense per-slot slab automatically
-        spec = model.paged_kv_spec() if cfg.paged else None
-        if spec is not None and not any(jax.tree_util.tree_leaves(spec)):
-            spec = None
-        self._spec = spec
-        self.paged = spec is not None
-        # the projections' policy flag also routes paged attention through
-        # the in-kernel block-table walk (models/attention.paged_attention
-        # ladder); decode runs DENSE projections but must carry the flag so
-        # its attention takes the same path as prefill's
-        self.paged_kernel = self.paged and bool(policy.use_pallas_kernels)
-        if self.paged_kernel and not self._exact_chunks:
-            # a padded prefill bucket the kernel cannot tile would silently
-            # fall back to the gather oracle while metrics/--trace claimed
-            # the kernel ran — reject it here instead (exact-chunk archs
-            # emit power-of-two chunks, always covered; decode is T = 1)
-            from repro.kernels.paged_attention import paged_kernel_covers
-            assert paged_kernel_covers(cfg.chunk_size), (
-                "paged-attention kernel cannot tile chunk_size="
-                f"{cfg.chunk_size} (see kernels.paged_attention"
-                ".paged_kernel_covers); use a power-of-two chunk_size or "
-                "drop use_pallas_kernels")
-        self.preemptions = 0
-        self.rejections = 0
-        self.preempt_log: List[tuple] = []      # (rid, state-when-preempted)
-        # lifecycle-hardening counters
-        self.degraded_iterations = 0  # iterations re-run on the jnp oracle
-        self.admission_retries = 0    # transient admission failures absorbed
-        self.watchdog_trips = 0       # forced evictions by the watchdog
-        self.timeouts = 0
-        self.cancellations = 0
-        self.restores = 0             # times restore() rebuilt this engine
-        # prefix caching needs every piece of continuation state to live in
-        # the paged KV pool: archs with recurrent blocks carry scan state
-        # that cached blocks cannot restore, so they stay cache-off even
-        # though their attention leaves are paged
-        self.prefix_cache = (self.paged and cfg.prefix_cache
-                             and not self._exact_chunks)
-        self.prefix_hits = 0        # admissions that reused ≥ 1 block
-        self.blocks_reused = 0      # total shared-block acquisitions
-        self.tokens_skipped = 0     # prefill rows served from the index
-        self.prefill_demand = 0     # prefill rows requested at admission
-        self._extra_rids: set = set()   # requests with modality extras:
-        # their hidden states depend on non-token inputs, so token-id chain
-        # hashes cannot address their KV — excluded from the prefix index
-        if self.paged:
-            self._max_blocks = max_blocks_per_slot(cfg.max_seq,
-                                                   cfg.block_size)
-            nb = (cfg.num_blocks if cfg.num_blocks is not None
-                  else cfg.num_slots * self._max_blocks)
-            self.pool: Optional[BlockPool] = BlockPool(
-                nb, cfg.block_size, prefix_cache=self.prefix_cache)
-            self._host_table = np.full((cfg.num_slots, self._max_blocks),
-                                       -1, np.int32)
-            self._table_dirty = True
-        else:
-            self.pool = None
-
-        self.requests: List[Request] = []
-        self._free_slots = list(range(cfg.num_slots))
-        self._slot_req: List[Optional[Request]] = [None] * cfg.num_slots
-        self.cache = None                      # built lazily per params
-        self.trace_counts: Dict[str, int] = {}
-        self.metrics: Dict[str, Any] = {}
+        self.exec = Executor(model, policy, cfg, mesh=mesh)
+        self.sched = Scheduler(
+            cfg, paged=self.exec.paged,
+            exact_chunks=self.exec.exact_chunks,
+            policy_enabled=policy.enabled, prefix_cache=cfg.prefix_cache,
+            faults=faults, validate=self._validate, hash_fn=_hash_blocks)
         # one-dispatch iterations (cfg.fused_step, env-overridable so the
         # chaos-smoke CI matrix can pin either path without code changes)
         env = os.environ.get("REPRO_FUSED_STEP")
         self.fused_step = (env != "0") if env is not None else cfg.fused_step
-        self.dispatches = 0       # compiled-program launches (incl. oracle)
         self.work_iterations = 0  # iterations that dispatched any program
-        self._it = 0                           # scheduler-iteration clock
+        self.restores = 0         # times restore() rebuilt this engine
+        self.metrics: Dict[str, Any] = {}
+        self.metrics_snapshot: Optional[MetricsSnapshot] = None
         self._key = None                       # sampling PRNG (run-owned)
-        self._last_progress = 0                # watchdog bookkeeping
         self.last_snapshot: Optional[Dict] = None
 
-        # every phase program takes a runtime ``fault`` operand added onto
-        # its logits (0.0 on clean runs, NaN when the injector fires a
-        # "nonfinite" fault — a runtime value, so injection never bakes
-        # into or retraces the compiled program) and returns an ``ok``
-        # finiteness verdict the degradation ladder checks host-side.
-        # ``ok`` also trips on GENUINE non-finite logits from a kernel bug.
-        def make_prefill_fn(policy, count_key):
-            def prefill_fn(params, cache, slot, tokens, chunk_len, extras,
-                           fault):
-                # runs at trace time only
-                self.trace_counts[count_key] = \
-                    self.trace_counts.get(count_key, 0) + 1
-                sub = slot_ops.slice_slot(cache, slot, self._spec)
-                batch = {"tokens": tokens, "chunk_len": chunk_len, **extras}
-                logits, sub = self.model.prefill_chunk(params, batch, sub,
-                                                       policy=policy)
-                logits = logits[0] + fault
-                ok = jnp.all(jnp.isfinite(logits))
-                return logits, slot_ops.write_slot(cache, slot, sub,
-                                                   self._spec), ok
-            return prefill_fn
+    # -------------------------------------------------- layer delegation
+    # the historical flat-engine attributes, routed to the owning layer so
+    # pre-split callers (tests, benchmarks, tools) keep working unchanged
+    @property
+    def requests(self):
+        return self.sched.requests
 
-        dense = DENSE.with_(use_pallas_kernels=policy.use_pallas_kernels)
+    @property
+    def pool(self):
+        return self.sched.pool
 
-        def make_decode_fn(policy, count_key):
-            def decode_fn(params, cache, tokens, active, key, fault):
-                self.trace_counts[count_key] = \
-                    self.trace_counts.get(count_key, 0) + 1
-                logits, new_cache = self.model.decode_step(
-                    params, tokens[:, None], cache, policy=policy)
-                logits = logits + fault
-                new_cache = slot_ops.where_active(active, new_cache, cache,
-                                                  self._spec)
-                nxt = self._sample(logits, key)
-                # inactive slots may legitimately hold junk logits — only
-                # active rows gate the degradation ladder
-                ok = jnp.all(jnp.isfinite(logits)
-                             | ~active.reshape(active.shape[0],
-                                               *([1] * (logits.ndim - 1))))
-                return jnp.where(active, nxt, tokens), new_cache, ok
-            return decode_fn
+    @property
+    def paged(self) -> bool:
+        return self.exec.paged
 
-        self._prefill_jit = jax.jit(make_prefill_fn(policy, "prefill"))
-        # preemption replay re-ingests tokens the request already EMITTED;
-        # their KV was originally written by the dense decode step, so the
-        # replay must also run dense or sparse-prefill outputs would drift
-        # from the one-shot oracle.  Chunks never span the prompt/emitted
-        # boundary (see _next_chunk); this program only ever traces (and
-        # the "prefill_replay" key only appears) if a preemption happens
-        # under a non-dense policy.
-        self._prefill_replay_jit = jax.jit(
-            make_prefill_fn(dense, "prefill_replay"))
-        self._decode_jit = jax.jit(make_decode_fn(dense, "decode"))
-        # graceful-degradation ladder: bit-exact jnp oracle twins of every
-        # phase program (kernel dispatch forced off).  jax.jit is lazy, so
-        # none of these trace — and no "*_oracle" trace-count key appears —
-        # unless an iteration actually degrades.
-        opolicy = policy.with_(use_pallas_kernels=False) \
-            if policy.use_pallas_kernels else policy
-        self._prefill_oracle_jit = jax.jit(
-            make_prefill_fn(opolicy, "prefill_oracle"))
-        self._prefill_replay_oracle_jit = jax.jit(
-            make_prefill_fn(DENSE, "prefill_replay_oracle"))
-        self._decode_oracle_jit = jax.jit(
-            make_decode_fn(DENSE, "decode_oracle"))
+    @property
+    def paged_kernel(self) -> bool:
+        return self.exec.paged_kernel
 
-        # ---- one-dispatch iterations: a single hybrid step program per
-        # shape bucket runs the active request's prefill chunk AND the
-        # slot-batched decode in one compiled dispatch.  Buckets are keyed
-        # (replay, has_prefill, has_decode) — static phase presence, so an
-        # idle phase costs nothing in the lowered program.  The prefill
-        # half writes its chunk KV first; the decode half then reads the
-        # already-updated cache, exactly like the legacy two-program order
-        # within an iteration.  Both halves share one ``fault`` operand
-        # and fold into one all-finite ``ok`` verdict (inactive decode
-        # rows masked), so the degradation ladder re-runs the WHOLE step
-        # on the oracle twin.
-        def make_step_fn(pf_policy, dec_policy, count_key,
-                         has_prefill, has_decode):
-            def step_fn(params, cache, slot, tokens, chunk_len, extras,
-                        toks, active, pkey, dkey, fault):
-                # runs at trace time only
-                self.trace_counts[count_key] = \
-                    self.trace_counts.get(count_key, 0) + 1
-                ok = jnp.asarray(True)
-                ptok = jnp.asarray(0, jnp.int32)
-                if has_prefill:
-                    sub = slot_ops.slice_slot(cache, slot, self._spec)
-                    batch = {"tokens": tokens, "chunk_len": chunk_len,
-                             **extras}
-                    p_logits, sub = self.model.prefill_chunk(
-                        params, batch, sub, policy=pf_policy)
-                    p_logits = p_logits[0] + fault
-                    ok = ok & jnp.all(jnp.isfinite(p_logits))
-                    cache = slot_ops.write_slot(cache, slot, sub,
-                                                self._spec)
-                    ptok = self._sample(p_logits, pkey)
-                nxt = toks
-                if has_decode:
-                    d_logits, new_cache = self.model.decode_step(
-                        params, toks[:, None], cache, policy=dec_policy)
-                    d_logits = d_logits + fault
-                    cache = slot_ops.where_active(active, new_cache, cache,
-                                                  self._spec)
-                    # inactive slots may legitimately hold junk logits —
-                    # only active rows gate the degradation ladder
-                    ok = ok & jnp.all(
-                        jnp.isfinite(d_logits)
-                        | ~active.reshape(active.shape[0],
-                                          *([1] * (d_logits.ndim - 1))))
-                    nxt = jnp.where(active, self._sample(d_logits, dkey),
-                                    toks)
-                return ptok, nxt, cache, ok
-            return step_fn
+    @property
+    def prefix_cache(self) -> bool:
+        return self.sched.prefix_cache
 
-        # raw (unjitted) step fns are kept for the jaxpr pins in tests
-        self._step_raw: Dict[tuple, Callable] = {}
-        self._step_jits: Dict[tuple, Callable] = {}
-        self._step_oracle_jits: Dict[tuple, Callable] = {}
-        for replay, hp, hd in ((False, True, False), (False, True, True),
-                               (False, False, True), (True, True, False),
-                               (True, True, True)):
-            name = "step" + ("_replay" if replay else
-                             ("_prefill" if hp else "")) \
-                + ("_decode" if hd else "")
-            pf = dense if replay else policy
-            opf = DENSE if replay else opolicy
-            key = (replay, hp, hd)
-            self._step_raw[key] = make_step_fn(pf, dense, name, hp, hd)
-            self._step_jits[key] = jax.jit(self._step_raw[key])
-            self._step_oracle_jits[key] = jax.jit(
-                make_step_fn(opf, DENSE, name + "_oracle", hp, hd))
+    @property
+    def preempt_log(self):
+        return self.sched.preempt_log
 
-    # ------------------------------------------------------------- sampling
-    def _sample(self, logits, key):
-        if self.cfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)
+    @property
+    def trace_counts(self):
+        return self.exec.trace_counts
+
+    @property
+    def dispatches(self) -> int:
+        return self.exec.dispatches
+
+    @property
+    def degraded_iterations(self) -> int:
+        return self.exec.degraded_iterations
+
+    @property
+    def preemptions(self) -> int:
+        return self.sched.preemptions
+
+    @property
+    def rejections(self) -> int:
+        return self.sched.rejections
+
+    @property
+    def admission_retries(self) -> int:
+        return self.sched.admission_retries
+
+    @property
+    def watchdog_trips(self) -> int:
+        return self.sched.watchdog_trips
+
+    @property
+    def timeouts(self) -> int:
+        return self.sched.timeouts
+
+    @property
+    def cancellations(self) -> int:
+        return self.sched.cancellations
+
+    @property
+    def prefix_hits(self) -> int:
+        return self.sched.prefix_hits
+
+    @property
+    def blocks_reused(self) -> int:
+        return self.sched.blocks_reused
+
+    @property
+    def tokens_skipped(self) -> int:
+        return self.sched.tokens_skipped
+
+    @property
+    def cache(self):
+        return self.exec.cache
+
+    @cache.setter
+    def cache(self, value):
+        self.exec.cache = value
+
+    @property
+    def _spec(self):
+        return self.exec._spec
+
+    @property
+    def _step_raw(self):
+        return self.exec._step_raw
+
+    @property
+    def _it(self) -> int:
+        return self.sched.it
 
     # ------------------------------------------------------------ admission
     def submit(self, tokens, max_new_tokens: int = 32, arrival: int = 0,
@@ -459,22 +308,7 @@ class ContinuousServingEngine:
         lifetime: past ``arrival + ttl`` scheduler iterations the request
         is moved to terminal ``TIMED_OUT`` from whatever phase it is in
         (None → ``cfg.ttl_default``; both None → no deadline)."""
-        tokens = np.asarray(tokens).reshape(-1).astype(np.int32)
-        assert tokens.size > 0, "empty prompt"
-        assert tokens.size + max_new_tokens <= self.cfg.max_seq, \
-            "request exceeds slot capacity (max_seq)"
-        if self.paged:
-            assert (self.pool.blocks_for(tokens.size + max_new_tokens)
-                    <= self.pool.num_blocks), \
-                "request exceeds block pool capacity"
-        rid = len(self.requests)
-        if ttl is None:
-            ttl = self.cfg.ttl_default
-        self.requests.append(Request(
-            rid=rid, tokens=tokens, max_new_tokens=max_new_tokens,
-            arrival=arrival,
-            deadline=None if ttl is None else arrival + ttl))
-        return rid
+        return self.sched.submit(tokens, max_new_tokens, arrival, ttl)
 
     def cancel(self, rid: int) -> bool:
         """Withdraw a request from any lifecycle phase.  Processed at the
@@ -482,575 +316,106 @@ class ContinuousServingEngine:
         half-unwound slot): the request moves to terminal ``CANCELLED``
         and its slot/blocks/prefix refs are released.  Returns False if
         the request is unknown or already terminal."""
-        req = next((r for r in self.requests if r.rid == rid), None)
-        if req is None or req.state in _TERMINAL:
-            return False
-        req.cancel_requested = True
-        return True
-
-    # ---------------------------------------------------- lifecycle plumbing
-    def _fire(self, site: str) -> Optional[str]:
-        return self.faults.fire(site) if self.faults is not None else None
-
-    def _evict_request(self, req: Request, state: str, it: int) -> None:
-        """Move ``req`` to terminal ``state`` from ANY lifecycle phase,
-        unwinding whatever it holds.  Full blocks are registered before
-        release — their rows are final KV, so the prefix index keeps them
-        (a re-submitted prompt still hits); the partially-written frontier
-        block is released unregistered, so no writable block is ever
-        published (audited by ``_audit_pool``)."""
-        if req.state in (PREFILL, DECODE):
-            if self.paged and req.blocks:
-                self._register_blocks(req)
-                self.pool.release(req.blocks[::-1])   # chain head → MRU end
-                req.blocks = []
-                req.shared = req.registered = 0
-            if req.slot >= 0:
-                if self.paged:
-                    self._host_table[req.slot, :] = -1
-                    self._table_dirty = True
-                self._free_slots.append(req.slot)
-                self._slot_req[req.slot] = None
-                req.slot = -1
-        req.state = state
-        req.done_iter = it
-        # terminal latency is still wall-clock since arrival — evicted
-        # requests (cancelled / timed out / rejected) otherwise report the
-        # -1.0 dataclass default as their latency_s
-        if req.arrival_time >= 0:
-            req.done_time = time.perf_counter() - req.arrival_time
-        req.filled = 0
-        req.kv_len = 0
-
-    def _retry(self, req: Request, it: int) -> None:
-        """Absorb a transient admission failure: exponential backoff, then
-        the REJECTED backstop once the per-request retry budget is spent
-        (an unbounded retry of a persistent fault would livelock strict-
-        FCFS admission)."""
-        req.retries += 1
-        self.admission_retries += 1
-        if req.retries > self.cfg.admission_retries:
-            self._evict_request(req, REJECTED, it)
-            self.rejections += 1
-        else:
-            req.next_retry_iter = it + min(
-                self.cfg.retry_backoff ** req.retries, 64)
-
-    def _reap(self, it: int) -> int:
-        """Process cancellations and deadlines at the iteration boundary;
-        returns how many requests reached a terminal state."""
-        n = 0
-        for r in self.requests:
-            if r.state in _TERMINAL:
-                continue
-            if r.cancel_requested:
-                self._evict_request(r, CANCELLED, it)
-                self.cancellations += 1
-                n += 1
-            elif r.deadline is not None and it >= r.deadline:
-                self._evict_request(r, TIMED_OUT, it)
-                self.timeouts += 1
-                n += 1
-        return n
-
-    def _seq(self, req: Request) -> np.ndarray:
-        """Tokens to prefill: the prompt, plus — after a preemption — the
-        tokens already emitted, replayed so decode resumes exactly where it
-        left off (greedy outputs are chunking-invariant, so the replayed
-        prefix regenerates the identical KV state)."""
-        if req.out:
-            return np.concatenate([req.tokens,
-                                   np.asarray(req.out, np.int32)])
-        return req.tokens
-
-    def _chain_for(self, req: Request, tokens: np.ndarray,
-                   n_full: int) -> List[int]:
-        """First ``n_full`` chain hashes of the request's sequence,
-        extending the memoized chain only over blocks not yet hashed."""
-        chain = req.hash_chain
-        if n_full > len(chain):
-            dense_from = len(req.tokens) if self.policy.enabled else None
-            chain.extend(chain_block_hashes(
-                tokens, self.pool.block_size, n_full, dense_from,
-                start=len(chain), h0=chain[-1] if chain else None))
-        return chain[:n_full]
-
-    def _match_prefix(self, req: Request, seq: np.ndarray) -> List[int]:
-        """Longest indexed block-prefix of the request's prefill sequence.
-        Capped at ``len(seq) - 1`` tokens: at least one token must run
-        through prefill to produce the logits the next token samples from,
-        so the request's last block is always a fresh allocation (and a
-        partially-covered tail block has no full-block hash anyway) —
-        shared blocks are therefore never writable."""
-        if not self.prefix_cache or req.rid in self._extra_rids:
-            return []
-        n_full = (len(seq) - 1) // self.pool.block_size
-        if n_full == 0:
-            return []
-        dense_from = len(req.tokens) if self.policy.enabled else None
-        return self.pool.match(
-            self._chain_for(req, seq, n_full),
-            keys=chain_block_keys(seq, self.pool.block_size, n_full,
-                                  dense_from))
-
-    def _admit(self, it: int) -> int:
-        # FCFS by arrival, not submission order: requests may be submitted
-        # with out-of-order arrival times (and preempted requests requeue
-        # with their original arrival).  Returns how many requests changed
-        # state (admitted or rejected) — the watchdog's progress signal.
-        moved = 0
-        for req in sorted(self.requests, key=lambda r: (r.arrival, r.rid)):
-            if req.state != WAITING or req.arrival > it:
-                continue
-            if req.next_retry_iter > it:
-                continue               # backing off a transient failure
-            if self.paged:
-                seq = self._seq(req)
-                need = self.pool.blocks_for(len(seq))
-                if need > min(self.pool.num_blocks, self._max_blocks):
-                    # can NEVER fit: strict FCFS would wait on it forever
-                    # and starve every request behind it (head-of-line
-                    # livelock) — reject with a terminal state instead.
-                    # ``submit`` already bounds prompt+max_new, and a
-                    # replay sequence (prompt + emitted) stays under that
-                    # bound, so through the public API this is a
-                    # defense-in-depth backstop: it converts any capacity
-                    # drift (out-of-band enqueues, future scheduler
-                    # changes shrinking the pool) into a visible REJECTED
-                    # request instead of a silent queue stall
-                    self._evict_request(req, REJECTED, it)
-                    self.rejections += 1
-                    moved += 1
-                    continue
-            if not self._free_slots:
-                break
-            if self._fire("admit") == "transient":
-                # injected transient admission failure (e.g. a control-
-                # plane hiccup): backoff-and-retry before the backstop
-                self._retry(req, it)
-                continue
-            skip = 0
-            if self.paged:
-                shared = self._match_prefix(req, seq)
-                # full feasibility BEFORE taking anything: reviving a
-                # zero-ref cached hit consumes availability (sharing a
-                # live block does not), and the fresh remainder must fit
-                # what is left — so a refused admission never touches the
-                # pool (no rollback, no phantom peak_in_use spike)
-                revive = sum(map(self.pool.is_cached, shared))
-                if need - len(shared) > self.pool.available - revive:
-                    # strict FCFS: the oldest waiting request admits first;
-                    # skipping ahead would starve long prompts under
-                    # sustained short-prompt traffic
-                    break
-                acquired: List[int] = []
-                try:
-                    for b in shared:
-                        self.pool.acquire_cached(b)
-                        acquired.append(b)
-                    fresh = self.pool.alloc(need - len(shared))
-                except RuntimeError:
-                    # allocation failed mid-admission (injected pool fault,
-                    # or capacity raced away): roll back the prefix refs
-                    # just acquired — the pool is left exactly as found —
-                    # and retry with backoff
-                    self.pool.release(acquired[::-1])
-                    self._retry(req, it)
-                    continue
-                req.blocks = shared + fresh
-                req.shared = req.registered = len(shared)
-                skip = len(shared) * self.pool.block_size
-                req.cached_tokens += skip
-                self.prefill_demand += len(seq)
-                self.tokens_skipped += skip
-                self.blocks_reused += len(shared)
-                if shared:
-                    self.prefix_hits += 1
-            slot = self._free_slots.pop(0)
-            # prefix-cached rows are already valid KV: start the slot's pos
-            # at the first non-cached token so the first prefill chunk runs
-            # mid-sequence (prefill_chunk scatters/attends at cache offsets
-            # either way); reset never touches pooled leaves, so the shared
-            # blocks other slots may be reading survive the slot handoff
-            self.cache = slot_ops.reset_slot(self.cache, slot, self._spec,
-                                             pos=skip)
-            if self.paged:
-                self._host_table[slot, :] = -1
-                self._host_table[slot, :len(req.blocks)] = req.blocks
-                self._table_dirty = True
-            req.slot, req.state = slot, PREFILL
-            req.filled = req.kv_len = skip
-            req.admitted_iter = it
-            self._slot_req[slot] = req
-            moved += 1
-        return moved
-
-    def _register_blocks(self, req: Request) -> None:
-        """Publish the request's full blocks in the prefix index.  KV rows
-        0..kv_len-1 hold the tokens ``(prompt ++ out)[:kv_len]`` (a freshly
-        sampled token's own KV is only written when it is next fed back
-        in), so full blocks are content-addressable by that token chain.
-        Called whenever row content is final AND worth publishing: after
-        each prefill chunk, and — to pick up decode-written rows — right
-        before the blocks are released at preemption or completion."""
-        if not self.prefix_cache or req.rid in self._extra_rids:
-            return
-        bs = self.pool.block_size
-        n_full = min(req.kv_len // bs, len(req.blocks))
-        if n_full <= req.registered:
-            return
-        seq = self._seq(req)[:req.kv_len]
-        hashes = self._chain_for(req, seq, n_full)
-        dense_from = len(req.tokens) if self.policy.enabled else None
-        keys = chain_block_keys(seq, bs, n_full, dense_from)
-        for i in range(req.registered, n_full):
-            self.pool.register(req.blocks[i], hashes[i], key=keys[i])
-        req.registered = n_full
-
-    def _preempt(self, req: Request) -> None:
-        """Requeue ``req`` (recompute-on-readmission): its blocks return to
-        the pool, its slot frees, and its emitted tokens stay on the
-        request to be replayed through prefill when it is re-admitted.
-        Full blocks are registered first, so as long as they survive in
-        the zero-ref LRU the replay is nearly free: the replayed
-        prompt+emitted prefix re-matches exactly what was just released."""
-        self.preemptions += 1
-        req.preempted += 1
-        self.preempt_log.append((req.rid, req.state))
-        self._register_blocks(req)
-        # deepest blocks first: chain hashes only match a CONTIGUOUS prefix
-        # from block 0, so eviction must consume chains tail-first — the
-        # reversed release order parks the chain head at the MRU end
-        self.pool.release(req.blocks[::-1])
-        req.blocks = []
-        req.shared = req.registered = 0
-        self._host_table[req.slot, :] = -1
-        self._table_dirty = True
-        self._free_slots.append(req.slot)
-        self._slot_req[req.slot] = None
-        req.slot = -1
-        req.state = WAITING
-        req.filled = 0
-        req.kv_len = 0
-
-    def _ensure_decode_blocks(self) -> None:
-        """Grab a fresh block for every decoding slot crossing a block
-        boundary; when the pool is dry, preempt the youngest active
-        request until the oldest decoders can proceed (or the needy
-        request is itself the youngest and yields)."""
-        order = sorted((r for r in self.requests if r.state == DECODE),
-                       key=lambda r: (r.admitted_iter, r.rid))
-        for r in order:
-            while r.state == DECODE:
-                need = self.pool.blocks_for(r.kv_len + 1)
-                if len(r.blocks) >= need:
-                    break
-                blk = None
-                if self.pool.available:
-                    try:
-                        blk = self.pool.alloc(1)
-                    except RuntimeError:
-                        blk = None   # injected exhaustion → preempt path
-                if blk is not None:
-                    self._host_table[r.slot, len(r.blocks)] = blk[0]
-                    r.blocks.extend(blk)
-                    self._table_dirty = True
-                else:
-                    victim = max((v for v in self.requests
-                                  if v.state in (PREFILL, DECODE)),
-                                 key=lambda v: (v.admitted_iter, v.rid))
-                    self._preempt(victim)
-
-    def _finish(self, req: Request, it: int, t0: float) -> None:
-        req.state = DONE
-        req.done_iter = it
-        anchor = req.arrival_time if req.arrival_time >= 0 else t0
-        req.done_time = time.perf_counter() - anchor
-        if self.paged and req.blocks:
-            self._register_blocks(req)
-            self.pool.release(req.blocks[::-1])   # chain head → MRU end
-            req.blocks = []
-            req.shared = req.registered = 0
-            self._host_table[req.slot, :] = -1
-            self._table_dirty = True
-        self._free_slots.append(req.slot)
-        self._slot_req[req.slot] = None
-        req.slot = -1
+        return self.sched.cancel(rid)
 
     def clear(self) -> None:
         """Drop completed requests (e.g. after a warmup pass) so a fresh
         stream can be submitted and measured on the already-compiled
         engine.  The prefix index deliberately survives: a warm cache
         across streams is the production behavior being measured."""
-        assert all(r.state in _TERMINAL for r in self.requests), \
-            "cannot clear with requests in flight"
-        self.requests = []
-        # rids restart at 0 for the next stream: stale modality-extras
-        # exclusions must not leak onto unrelated rid-colliding requests
-        self._extra_rids = set()
-        self._it = 0
+        self.sched.clear()
         self._key = None
-        self._last_progress = 0
 
-    # ---------------------------------------------------------- auditing
-    def _audit_pool(self) -> None:
-        """Refcount/ownership invariants (cfg.validate_pool): the pool's
-        internal partition holds, every live reference is accounted to
-        exactly one slot-holding request, and no block is simultaneously
-        writable from two slots.  A request's writable frontier is block
-        ``kv_len // block_size`` onward (rows below kv_len are final);
-        everything it can still write must be exclusively owned and
-        unpublished — shared/registered blocks are full and immutable."""
-        pool = self.pool
-        pool.check_invariants()
-        expect: Dict[int, int] = {}
-        writable: Dict[int, int] = {}
-        for r in self.requests:
-            if r.state not in (PREFILL, DECODE):
-                assert not r.blocks, \
-                    f"r{r.rid} ({r.state}) still holds blocks {r.blocks}"
-                continue
-            for b in r.blocks:
-                expect[b] = expect.get(b, 0) + 1
-            for b in r.blocks[r.kv_len // pool.block_size:]:
-                assert b not in writable, \
-                    f"block {b} writable from r{writable[b]} AND r{r.rid}"
-                writable[b] = r.rid
-                assert pool.refcount(b) == 1, \
-                    f"writable block {b} of r{r.rid} is shared"
-                assert not pool.is_registered(b), \
-                    f"writable block {b} of r{r.rid} is published"
-        assert expect == dict(pool._ref), \
-            f"refcount skew: requests hold {expect}, pool says {pool._ref}"
-
-    # ------------------------------------------------------------ phases
-    def _sync_table(self) -> None:
-        if self.paged and self._table_dirty:
-            self.cache["block_table"] = jnp.asarray(self._host_table)
-            self._table_dirty = False
-
-    def _next_chunk(self, req: Request):
-        """(tokens (1, C), chunk_len, send_extras, is_replay) for the next
-        chunk.  Chunks never span the prompt/emitted boundary, so a replay
-        chunk (re-ingesting emitted tokens after a preemption) is entirely
-        replay and runs through the dense program.
-
-        Returns the ``(None, 0, False, False)`` sentinel when nothing
-        remains to ingest — a fully-filled request momentarily parked in
-        PREFILL must not index into an empty dyadic ladder."""
-        c = self.cfg.chunk_size
-        seq = self._seq(req)
-        rem = len(seq) - req.filled
-        if rem <= 0:
-            return None, 0, False, False
-        if req.filled < len(req.tokens):
-            rem = min(rem, len(req.tokens) - req.filled)
-            replay = False
-        else:
-            replay = self.policy.enabled
-        if self._exact_chunks:
-            size = _dyadic_sizes(rem, c)[0]
-            chunk = seq[req.filled:req.filled + size]
-            return chunk[None, :], size, req.filled == 0, replay
-        v = min(c, rem)
-        chunk = np.zeros((c,), np.int32)
-        chunk[:v] = seq[req.filled:req.filled + v]
-        return chunk[None, :], v, req.filled == 0, replay
-
-    def _prefill_one(self, params, req: Request, extras: Dict, it: int,
-                     t0: float, key) -> None:
-        tokens, clen, first, replay = self._next_chunk(req)
-        if tokens is None:
-            return
-        ex = extras if first else {}
-        self._sync_table()
-        kind = self._fire("prefill")
+    # ------------------------------------------------------------- phases
+    def _crash_fire(self, site: str, it: int) -> float:
+        """Fire a fault site; raise on "crash", return the logits-fault
+        addend ("nonfinite" → NaN, clean → 0)."""
+        kind = self.sched._fire(site)
         if kind == "crash":
-            raise EngineCrash(f"injected crash in prefill (it={it})")
-        fault = jnp.float32(np.nan if kind == "nonfinite" else 0.0)
-        fn = self._prefill_replay_jit if replay else self._prefill_jit
-        args = (params, self.cache, jnp.asarray(req.slot, jnp.int32),
-                jnp.asarray(tokens), jnp.asarray(clen, jnp.int32), ex)
-        self.dispatches += 1
-        try:
-            logits, new_cache, ok = fn(*args, fault)
-            ok = bool(ok)
-        except KernelFault:
-            # kernel compile/lowering failure at trace time: the failed
-            # trace aborted before any output existed (and was not cached)
-            ok = False
-        if not ok:
-            # degradation ladder: discard the faulted outputs (functional
-            # jit — self.cache is untouched) and re-run the SAME operands
-            # on the bit-exact jnp oracle program
-            self.degraded_iterations += 1
-            ofn = (self._prefill_replay_oracle_jit if replay
-                   else self._prefill_oracle_jit)
-            self.dispatches += 1
-            logits, new_cache, ok = ofn(*args, jnp.float32(0.0))
-            assert bool(ok), "oracle prefill produced non-finite logits"
-        self.cache = new_cache
-        req.filled += clen
-        req.kv_len += clen
-        # publish blocks the chunk just completed: a request admitted
-        # while this one is still decoding can already share its prompt
-        self._register_blocks(req)
-        if req.filled == len(self._seq(req)):   # seq ingested: sample
-            tok = int(self._sample(logits, key))
-            req.out.append(tok)
-            if req.first_token_iter < 0:
-                req.first_token_iter = it
-            if tok == self.cfg.eos_token or len(req.out) >= req.max_new_tokens:
-                self._finish(req, it, t0)
-            else:
-                req.state, req.cur = DECODE, tok
+            raise EngineCrash(f"injected crash in {site} (it={it})")
+        return float("nan") if kind == "nonfinite" else 0.0
 
-    def _decode_all(self, params, decoding: Sequence[Request], it: int,
-                    t0: float, key) -> None:
-        toks = np.zeros((self.cfg.num_slots,), np.int32)
-        act = np.zeros((self.cfg.num_slots,), bool)
-        for r in decoding:
-            toks[r.slot], act[r.slot] = r.cur, True
-        self._sync_table()
-        kind = self._fire("decode")
-        if kind == "crash":
-            raise EngineCrash(f"injected crash in decode (it={it})")
-        fault = jnp.float32(np.nan if kind == "nonfinite" else 0.0)
-        args = (params, self.cache, jnp.asarray(toks), jnp.asarray(act), key)
-        self.dispatches += 1
-        try:
-            nxt, new_cache, ok = self._decode_jit(*args, fault)
-            ok = bool(ok)
-        except KernelFault:
-            ok = False
-        if not ok:
-            # same degradation ladder as prefill (argmax over NaN logits
-            # silently yields token 0, so tokens alone cannot reveal the
-            # fault — the program's ``ok`` verdict gates instead)
-            self.degraded_iterations += 1
-            self.dispatches += 1
-            nxt, new_cache, ok = self._decode_oracle_jit(
-                *args, jnp.float32(0.0))
-            assert bool(ok), "oracle decode produced non-finite logits"
-        self.cache = new_cache
-        nxt = np.asarray(nxt)
-        for r in decoding:
-            r.kv_len += 1
-            tok = int(nxt[r.slot])
-            r.out.append(tok)
-            r.cur = tok
-            if tok == self.cfg.eos_token or len(r.out) >= r.max_new_tokens:
-                self._finish(r, it, t0)
+    def _step_fused(self, params, extras: Dict[int, Dict], it: int,
+                    t0: float) -> bool:
+        """One-dispatch iteration: the scheduler's fused plan runs as a
+        SINGLE compiled step program (executor-side bucketing by static
+        phase presence).  Returns whether any model work ran.
 
-    def _step_all(self, params, extras: Dict[int, Dict], it: int,
-                  t0: float) -> bool:
-        """One-dispatch iteration: the active request's prefill chunk and
-        the slot-batched decode run in a SINGLE compiled step program
-        (bucketed by (replay, has_prefill, has_decode) — static phase
-        presence keeps idle halves out of the lowered program).  Returns
-        whether any model work ran this iteration.
-
-        Identical host bookkeeping to the legacy ``_prefill_one`` +
-        ``_decode_all`` pair, with one scheduling difference: a request
-        whose final chunk lands this iteration starts decoding NEXT
-        iteration (the decode roster is frozen before dispatch), where
-        the legacy path recomputed the roster after prefill.  Greedy
-        token streams are identical; see ``ContinuousConfig.fused_step``
-        for the temperature>0 caveat."""
-        prefilling = [r for r in self.requests if r.state == PREFILL]
-        decoding = [r for r in self.requests if r.state == DECODE]
-        req = prefilling[0] if prefilling else None
-        tokens = None
-        clen, first, replay = 0, False, False
-        if req is not None:
-            tokens, clen, first, replay = self._next_chunk(req)
-            if tokens is None:     # fully ingested, parked — nothing to run
-                req = None
-        has_p = req is not None
-        has_d = bool(decoding)
-        if not (has_p or has_d):
+        Identical host bookkeeping to the legacy prefill+decode pair, with
+        one scheduling difference: a request whose final chunk lands this
+        iteration starts decoding NEXT iteration (the decode roster is
+        frozen before dispatch), where the legacy path recomputed the
+        roster after prefill.  Greedy token streams are identical; see
+        ``ContinuousConfig.fused_step`` for the temperature>0 caveat."""
+        plan = self.sched.plan_step()
+        if not plan.has_work:
             return False
-        self._sync_table()
+        self.exec.apply_effects(plan)
         # both legacy fault sites still fire (chaos schedules target them
         # by name); either hit folds into the step's shared fault operand,
         # so a single fault degrades the WHOLE fused step to the oracle —
         # exactly the blast radius of one compiled program
         fault_val = 0.0
-        if has_p:
-            kind = self._fire("prefill")
-            if kind == "crash":
-                raise EngineCrash(f"injected crash in prefill (it={it})")
-            if kind == "nonfinite":
-                fault_val = float("nan")
-        if has_d:
-            kind = self._fire("decode")
-            if kind == "crash":
-                raise EngineCrash(f"injected crash in decode (it={it})")
-            if kind == "nonfinite":
-                fault_val = float("nan")
+        if plan.prefill is not None:
+            fault_val += self._crash_fire("prefill", it)
+        if plan.decode is not None:
+            fault_val += self._crash_fire("decode", it)
         fault = jnp.float32(fault_val)
         # key-split order matches the legacy path (prefill, then decode)
         pkey = dkey = jnp.zeros((2,), jnp.uint32)   # placeholder operands
-        if has_p:
+        if plan.prefill is not None:
             self._key, pkey = jax.random.split(self._key)
-        if has_d:
+        if plan.decode is not None:
             self._key, dkey = jax.random.split(self._key)
-        toks = np.zeros((self.cfg.num_slots,), np.int32)
-        act = np.zeros((self.cfg.num_slots,), bool)
-        for r in decoding:
-            toks[r.slot], act[r.slot] = r.cur, True
-        if has_p:
-            ex = extras.get(req.rid, {}) if first else {}
-            slot = jnp.asarray(req.slot, jnp.int32)
-            ptoks = jnp.asarray(tokens)
-            pclen = jnp.asarray(clen, jnp.int32)
-        else:
-            ex = {}
-            slot = jnp.asarray(0, jnp.int32)
-            ptoks = jnp.zeros((1, 1), jnp.int32)
-            pclen = jnp.asarray(0, jnp.int32)
-        bucket = (replay, has_p, has_d)
-        args = (params, self.cache, slot, ptoks, pclen, ex,
-                jnp.asarray(toks), jnp.asarray(act), pkey, dkey)
-        self.dispatches += 1
-        try:
-            ptok, nxt, new_cache, ok = self._step_jits[bucket](*args, fault)
-            ok = bool(ok)
-        except KernelFault:
-            ok = False     # trace aborted before any output was cached
-        if not ok:
-            # degradation ladder: one oracle re-run replaces the one
-            # faulted dispatch — same operands, zero fault
-            self.degraded_iterations += 1
-            self.dispatches += 1
-            ptok, nxt, new_cache, ok = self._step_oracle_jits[bucket](
-                *args, jnp.float32(0.0))
-            assert bool(ok), "oracle step produced non-finite logits"
-        self.cache = new_cache
-        if has_p:
-            req.filled += clen
-            req.kv_len += clen
-            self._register_blocks(req)
-            if req.filled == len(self._seq(req)):   # seq ingested: sample
-                tok = int(ptok)
-                req.out.append(tok)
-                if req.first_token_iter < 0:
-                    req.first_token_iter = it
-                if (tok == self.cfg.eos_token
-                        or len(req.out) >= req.max_new_tokens):
-                    self._finish(req, it, t0)
-                else:
-                    req.state, req.cur = DECODE, tok
-        if has_d:
-            nxt = np.asarray(nxt)
-            for r in decoding:
-                r.kv_len += 1
-                tok = int(nxt[r.slot])
-                r.out.append(tok)
-                r.cur = tok
-                if (tok == self.cfg.eos_token
-                        or len(r.out) >= r.max_new_tokens):
-                    self._finish(r, it, t0)
+        pw = plan.prefill
+        ex = extras.get(pw.req.rid, {}) if pw is not None and pw.first else {}
+        res = self.exec.step(params, plan, ex, pkey, dkey, fault)
+        if pw is not None:
+            self.sched.commit_chunk(pw.req, pw.chunk_len)
+            if self.sched.seq_complete(pw.req):   # seq ingested: sample
+                self.sched.emit_prefill_token(pw.req, res.prefill_token,
+                                              it, t0)
+        if plan.decode is not None:
+            self.sched.emit_decode_tokens(plan.decode, res.decode_tokens,
+                                          it, t0)
+        return True
+
+    def _step_prefill(self, params, extras: Dict[int, Dict], it: int,
+                      t0: float) -> bool:
+        """Legacy two-program split, phase 1: one chunk for the oldest
+        prefilling request.  Returns whether the PREFILL roster was
+        non-empty (the historical progress signal — a fully-ingested
+        request parked in PREFILL counts as work even though nothing
+        dispatches)."""
+        if not any(r.state == PREFILL for r in self.sched.requests):
+            return False
+        self._key, sub = jax.random.split(self._key)
+        plan = self.sched.plan_prefill()
+        pw = plan.prefill
+        if pw is None:     # fully ingested, parked — nothing to run
+            return True
+        self.exec.apply_effects(plan)
+        fault = jnp.float32(self._crash_fire("prefill", it))
+        ex = extras.get(pw.req.rid, {}) if pw.first else {}
+        logits = self.exec.prefill(params, plan, ex, fault)
+        self.sched.commit_chunk(pw.req, pw.chunk_len)
+        if self.sched.seq_complete(pw.req):   # seq ingested: sample
+            tok = self.exec.sample_token(logits, sub)
+            self.sched.emit_prefill_token(pw.req, tok, it, t0)
+        return True
+
+    def _step_decode(self, params, it: int, t0: float) -> bool:
+        """Legacy two-program split, phase 2: one slot-batched decode step
+        (roster computed AFTER prefill, so a request finishing prefill
+        this iteration decodes the same iteration)."""
+        plan = self.sched.plan_decode()
+        if plan.decode is None:
+            return False
+        self._key, sub = jax.random.split(self._key)
+        self.exec.apply_effects(plan)
+        fault = jnp.float32(self._crash_fire("decode", it))
+        nxt = self.exec.decode(params, plan, sub, fault)
+        self.sched.emit_decode_tokens(plan.decode, nxt, it, t0)
         return True
 
     # ------------------------------------------------------------ main loop
@@ -1062,36 +427,30 @@ class ContinuousServingEngine:
         VLM stubs).  Returns per-request outputs and aggregate metrics.
         """
         extras = extras or {}
-        if self.cache is None:
-            if self.paged:
-                self.cache = init_paged_cache(
-                    self.model, self.cfg.num_slots, self.cfg.max_seq,
-                    self.cfg.block_size, self.pool.num_blocks, self._spec)
-            else:
-                self.cache = slot_ops.init_slot_cache(
-                    self.model, self.cfg.num_slots, self.cfg.max_seq)
-        self._extra_rids |= set(extras)
+        sched, ex = self.sched, self.exec
+        ex.init_cache(sched.pool.num_blocks if self.paged else None)
+        sched.mark_extras(extras)
         if self._key is None:   # survives across run() calls and restore()
             self._key = jax.random.PRNGKey(self.cfg.seed)
         t0 = time.perf_counter()
-        it0 = self._it
-        preempt0, reject0 = self.preemptions, self.rejections
-        hits0, reused0 = self.prefix_hits, self.blocks_reused
-        skipped0, demand0 = self.tokens_skipped, self.prefill_demand
-        degraded0, retries0 = self.degraded_iterations, self.admission_retries
-        wdog0, timeout0 = self.watchdog_trips, self.timeouts
-        cancel0 = self.cancellations
-        disp0, work0 = self.dispatches, self.work_iterations
+        it0 = sched.it
+        preempt0, reject0 = sched.preemptions, sched.rejections
+        hits0, reused0 = sched.prefix_hits, sched.blocks_reused
+        skipped0, demand0 = sched.tokens_skipped, sched.prefill_demand
+        degraded0, retries0 = ex.degraded_iterations, sched.admission_retries
+        wdog0, timeout0 = sched.watchdog_trips, sched.timeouts
+        cancel0 = sched.cancellations
+        disp0, work0 = ex.dispatches, self.work_iterations
         if self.paged:
-            self.pool.peak_in_use = self.pool.in_use   # per-run peak
-            evict0 = self.pool.evictions
+            sched.pool.peak_in_use = sched.pool.in_use   # per-run peak
+            evict0 = sched.pool.evictions
         # the kernel-dispatch fault sites (core/pruner, models/attention)
         # cannot see this engine — activate the injector globally for the
         # duration of the loop (EngineCrash still deactivates cleanly)
         fault_mod.activate(self.faults)
         try:
-            while any(r.state not in _TERMINAL for r in self.requests):
-                it = self._it
+            while sched.live():
+                it = sched.it
                 assert it - it0 < self.cfg.max_iters, "scheduler stuck"
                 if self.faults is not None:
                     self.faults.tick(it)
@@ -1102,128 +461,97 @@ class ContinuousServingEngine:
                     # iteration boundary = consistent state: a crash later
                     # this iteration rewinds here via restore()
                     self.last_snapshot = self.snapshot()
-                now = time.perf_counter()
-                for r in self.requests:  # anchor wall-clock latency at arrival
-                    # stamped unconditionally on visibility, NOT gated on
-                    # WAITING: a request admitted the same iteration it
-                    # became visible would otherwise keep the -1.0 default
-                    # and report garbage latency
-                    if r.arrival <= it and r.arrival_time < 0:
-                        r.arrival_time = now
-                reaped = self._reap(it)
-                admitted = self._admit(it)
+                sched.stamp_arrivals(it, time.perf_counter())
+                reaped = sched.reap(it)
+                admitted = sched.admit(it)
                 if self.fused_step:
                     # block grab moves BEFORE the dispatch: the fused
                     # program reads the final roster/table, and a dry-pool
                     # preemption can still unwind the prefilling request
                     # ahead of its chunk
                     if self.paged:
-                        self._ensure_decode_blocks()
-                    worked = self._step_all(params, extras, it, t0)
+                        sched.ensure_decode_blocks()
+                    worked = self._step_fused(params, extras, it, t0)
                 else:
-                    prefilling = [r for r in self.requests
-                                  if r.state == PREFILL]
-                    if prefilling:
-                        self._key, sub = jax.random.split(self._key)
-                        req = prefilling[0]
-                        self._prefill_one(params, req,
-                                          extras.get(req.rid, {}),
-                                          it, t0, sub)
+                    worked = self._step_prefill(params, extras, it, t0)
                     if self.paged:
-                        self._ensure_decode_blocks()
-                    decoding = [r for r in self.requests
-                                if r.state == DECODE]
-                    if decoding:
-                        self._key, sub = jax.random.split(self._key)
-                        self._decode_all(params, decoding, it, t0, sub)
-                    worked = bool(prefilling or decoding)
+                        sched.ensure_decode_blocks()
+                    worked = self._step_decode(params, it, t0) or worked
                 if worked:
                     self.work_iterations += 1
                 if self.paged and self._validate:
-                    self._audit_pool()
-                # no-progress watchdog: clean scheduling always advances
-                # (prefill/decode run every iteration something is active),
-                # so a stall with admission-eligible waiters only arises
-                # under persistent faults — force-reject the oldest stuck
-                # request instead of livelocking until max_iters
-                progressed = bool(reaped or admitted or worked)
-                pending = [r for r in self.requests
-                           if r.state == WAITING and r.arrival <= it]
-                if progressed or not pending:
-                    self._last_progress = it
-                elif it - self._last_progress >= self.cfg.watchdog_iters:
-                    stuck = min(pending, key=lambda r: (r.arrival, r.rid))
-                    self._evict_request(stuck, REJECTED, it)
-                    self.rejections += 1
-                    self.watchdog_trips += 1
-                    self._last_progress = it
-                self._it += 1
+                    sched.audit_pool()
+                sched.observe_progress(it, bool(reaped or admitted
+                                                or worked))
+                sched.it += 1
         finally:
             fault_mod.deactivate()
-        it = self._it - it0
+        it = sched.it - it0
         wall = time.perf_counter() - t0
-        gen = sum(len(r.out) for r in self.requests)
-        self.metrics = {
-            "iterations": it,
-            "wall_s": wall,
-            "generated_tokens": gen,
-            "tokens_per_s": gen / max(wall, 1e-9),
-            "trace_counts": dict(self.trace_counts),
+        gen = sum(len(r.out) for r in sched.requests)
+        snap = MetricsSnapshot(
+            iterations=it,
+            wall_s=wall,
+            generated_tokens=gen,
+            tokens_per_s=gen / max(wall, 1e-9),
+            trace_counts=dict(ex.trace_counts),
             # compiled-program launches per iteration that ran model work
             # (oracle re-runs included) — 1.0 on a clean fused run, ~2 on
             # the legacy two-program split when prefill+decode overlap
-            "dispatches": self.dispatches - disp0,
-            "dispatches_per_iteration": (
-                (self.dispatches - disp0)
+            dispatches=ex.dispatches - disp0,
+            dispatches_per_iteration=(
+                (ex.dispatches - disp0)
                 / max(self.work_iterations - work0, 1)),
-            "degraded_iterations": self.degraded_iterations - degraded0,
-            "lifecycle": {
-                "terminal_states": {
-                    s: sum(1 for r in self.requests if r.state == s)
-                    for s in _TERMINAL},
-                "admission_retries": self.admission_retries - retries0,
-                "watchdog_trips": self.watchdog_trips - wdog0,
-                "timeouts": self.timeouts - timeout0,
-                "cancellations": self.cancellations - cancel0,
-                "restores": self.restores,
-                "faults_fired": (self.faults.total_fired
-                                 if self.faults is not None else 0),
-            },
-            "paged": ({
-                "enabled": True,
-                "block_size": self.pool.block_size,
-                "num_blocks": self.pool.num_blocks,
-                "peak_blocks_in_use": self.pool.peak_in_use,
-                "preemptions": self.preemptions - preempt0,
-                "rejections": self.rejections - reject0,
-                "attention_kernel": self.paged_kernel,
-                "prefix_cache": self.prefix_cache,
-                "prefix_hits": self.prefix_hits - hits0,
-                "blocks_reused": self.blocks_reused - reused0,
-                "tokens_skipped": self.tokens_skipped - skipped0,
-                "prefill_tokens": self.prefill_demand - demand0,
-                "cached_blocks": self.pool.cached_blocks,
-                "evictions": self.pool.evictions - evict0,
-            } if self.paged else {"enabled": False}),
-            "requests": [{
-                "rid": r.rid,
-                "prompt_len": int(len(r.tokens)),
-                "arrival": r.arrival,
-                "state": r.state,
-                "admitted_iter": r.admitted_iter,
-                "first_token_iter": r.first_token_iter,
-                "done_iter": r.done_iter,
-                "latency_iters": r.done_iter - r.arrival,
-                "latency_s": r.done_time,
-                "n_out": len(r.out),
-                "preemptions": r.preempted,
-                "cached_tokens": r.cached_tokens,
-                "retries": r.retries,
-                "deadline": r.deadline,
-            } for r in self.requests],
-        }
+            degraded_iterations=ex.degraded_iterations - degraded0,
+            lifecycle=LifecycleMetrics(
+                terminal_states={
+                    s: sum(1 for r in sched.requests if r.state == s)
+                    for s in TERMINAL},
+                admission_retries=sched.admission_retries - retries0,
+                watchdog_trips=sched.watchdog_trips - wdog0,
+                timeouts=sched.timeouts - timeout0,
+                cancellations=sched.cancellations - cancel0,
+                restores=self.restores,
+                faults_fired=(self.faults.total_fired
+                              if self.faults is not None else 0),
+            ),
+            paged=(PagedMetrics(
+                enabled=True,
+                block_size=sched.pool.block_size,
+                num_blocks=sched.pool.num_blocks,
+                peak_blocks_in_use=sched.pool.peak_in_use,
+                preemptions=sched.preemptions - preempt0,
+                rejections=sched.rejections - reject0,
+                attention_kernel=ex.paged_kernel,
+                prefix_cache=sched.prefix_cache,
+                prefix_hits=sched.prefix_hits - hits0,
+                blocks_reused=sched.blocks_reused - reused0,
+                tokens_skipped=sched.tokens_skipped - skipped0,
+                prefill_tokens=sched.prefill_demand - demand0,
+                cached_blocks=sched.pool.cached_blocks,
+                evictions=sched.pool.evictions - evict0,
+            ) if self.paged else PagedMetrics(enabled=False)),
+            requests=[RequestMetrics(
+                rid=r.rid,
+                prompt_len=int(len(r.tokens)),
+                arrival=r.arrival,
+                state=r.state,
+                admitted_iter=r.admitted_iter,
+                first_token_iter=r.first_token_iter,
+                done_iter=r.done_iter,
+                latency_iters=r.done_iter - r.arrival,
+                latency_s=r.done_time,
+                n_out=len(r.out),
+                preemptions=r.preempted,
+                cached_tokens=r.cached_tokens,
+                retries=r.retries,
+                deadline=r.deadline,
+            ) for r in sched.requests],
+        )
+        self.metrics_snapshot = snap
+        self.metrics = snap.to_dict()
         return {
-            "outputs": {r.rid: list(r.out) for r in self.requests},
+            "outputs": {r.rid: list(r.out) for r in sched.requests},
             "metrics": self.metrics,
         }
 
@@ -1237,31 +565,14 @@ class ContinuousServingEngine:
         salted ``hash()``, so a snapshot only restores into the same
         process (matching its purpose: surviving an ENGINE crash, not a
         process crash)."""
-        return {
-            "it": self._it,
-            "key": None if self._key is None else np.asarray(self._key),
-            "requests": copy.deepcopy(self.requests),
-            "slot_rids": [None if r is None else r.rid
-                          for r in self._slot_req],
-            "free_slots": list(self._free_slots),
-            "extra_rids": set(self._extra_rids),
-            "pool": self.pool.snapshot() if self.paged else None,
-            "host_table": (self._host_table.copy() if self.paged else None),
-            "counters": {
-                "preemptions": self.preemptions,
-                "rejections": self.rejections,
-                "degraded_iterations": self.degraded_iterations,
-                "admission_retries": self.admission_retries,
-                "watchdog_trips": self.watchdog_trips,
-                "timeouts": self.timeouts,
-                "cancellations": self.cancellations,
-                "restores": self.restores,
-                "prefix_hits": self.prefix_hits,
-                "blocks_reused": self.blocks_reused,
-                "tokens_skipped": self.tokens_skipped,
-                "prefill_demand": self.prefill_demand,
-            },
-        }
+        snap = self.sched.host_snapshot()
+        snap["key"] = None if self._key is None else np.asarray(self._key)
+        # executor/driver counters ride along in the scheduler's counter
+        # dict so the snapshot schema matches the pre-split engine's
+        snap["counters"]["degraded_iterations"] = \
+            self.exec.degraded_iterations
+        snap["counters"]["restores"] = self.restores
+        return snap
 
     def restore(self, snap: Dict[str, Any]) -> None:
         """Rebuild host-side state from a :meth:`snapshot` taken in this
@@ -1272,31 +583,10 @@ class ContinuousServingEngine:
         prefix index, and replay through prefill on re-admission: the
         same recompute path preemption uses, so resumed greedy outputs
         are token-identical to an undisturbed run."""
-        cfg = self.cfg
-        self._it = snap["it"]
+        counters = dict(snap["counters"])
+        self.exec.degraded_iterations = counters.pop("degraded_iterations")
+        self.restores = counters.pop("restores") + 1
+        self.sched.host_restore({**snap, "counters": counters})
         self._key = (None if snap["key"] is None
                      else jnp.asarray(snap["key"]))
-        self._last_progress = self._it     # fresh watchdog grace period
-        self.requests = copy.deepcopy(snap["requests"])
-        self._extra_rids = set(snap["extra_rids"])
-        self._free_slots = list(range(cfg.num_slots))
-        self._slot_req = [None] * cfg.num_slots
-        self.cache = None                  # rebuilt lazily by run()
-        for r in self.requests:
-            if r.state in (PREFILL, DECODE):
-                r.state = WAITING
-                r.slot = -1
-                r.blocks = []
-                r.shared = r.registered = 0
-                r.filled = 0
-                r.kv_len = 0
-        if self.paged:
-            self.pool = BlockPool(snap["pool"]["num_blocks"],
-                                  cfg.block_size,
-                                  prefix_cache=self.prefix_cache)
-            self._host_table = np.full((cfg.num_slots, self._max_blocks),
-                                       -1, np.int32)
-            self._table_dirty = True
-        for name, val in snap["counters"].items():
-            setattr(self, name, val)
-        self.restores += 1
+        self.exec.drop_cache()             # rebuilt lazily by run()

@@ -20,6 +20,7 @@ phase once per shape bucket (see ``serve/README.md``).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Any, Dict, Optional
 
@@ -41,7 +42,13 @@ class ServeConfig:
 
 class ServingEngine:
     def __init__(self, model, policy: SparsityPolicy = DENSE,
-                 cfg: ServeConfig = ServeConfig()):
+                 cfg: ServeConfig = ServeConfig(), *, _via_api: bool = False):
+        if not _via_api:
+            warnings.warn(
+                "constructing ServingEngine directly is deprecated; use "
+                "repro.serve.api.Engine.from_config — Engine.generate is the "
+                "one-shot adapter (serve/README.md has the migration table)",
+                DeprecationWarning, stacklevel=2)
         self.model = model
         self.policy = policy
         self.cfg = cfg

@@ -46,12 +46,14 @@ from __future__ import annotations
 from collections import Counter, OrderedDict, deque
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.faults import fire as _fire_fault
-from repro.serve.slots import slot_axis
+
+# NOTE: no module-level jax import — the Scheduler layer of the serving
+# split imports this module for BlockPool + chain hashing, and must stay
+# pure host code (pinned by test_sharded_serving).  The one device-side
+# helper, init_paged_cache, imports jax lazily.
 
 __all__ = ["BlockPool", "chain_block_hashes", "chain_block_keys",
            "init_paged_cache", "max_blocks_per_slot"]
@@ -443,6 +445,10 @@ def init_paged_cache(model, num_slots: int, max_seq: int, block_size: int,
     # shapes only — materializing the dense slab just to discard its paged
     # leaves would transiently cost dense + pool memory, exactly the
     # footprint paging exists to avoid
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serve.slots import slot_axis
     shapes = jax.eval_shape(lambda: model.init_cache(num_slots, max_seq))
     mb = max_blocks_per_slot(max_seq, block_size)
     out: Dict[str, Any] = {
