@@ -1,0 +1,216 @@
+"""``repro.analysis`` — the static jaxpr/Pallas contract checker.
+
+The repo's hot-path guarantees (one ``pallas_call`` per projection, zero
+pool-shaped gathers/scatters outside kernels, one dispatch per
+iteration, a jax-free scheduler) used to live as ad-hoc helpers
+copy-pasted across test files.  This subsystem makes them a checked
+contract: a rule registry plus a CLI —
+
+    python -m repro.analysis [--rules jaxpr,vmem,purity,retrace] \
+        [--json-out analysis.json]
+
+— that runs WITHOUT a TPU (jaxpr tracing is abstract; Pallas stays in
+interpret mode) and exits non-zero on violations.
+
+Rule families (one module each):
+
+  ``jaxpr``   (:mod:`.jaxpr_rules`)  dispatch pins over traced programs:
+              pallas_call count per projection, pool-op containment for
+              every step bucket of ``serve/executor.py`` (enumerated
+              from ``Executor.STEP_BUCKETS``, not hand-listed), step
+              purity/effects, f64 leakage, tp-shard pins.
+  ``vmem``    (:mod:`.vmem`)  static per-core VMEM/SMEM budget estimator
+              over every kernel's BlockSpecs/grid/scratch across the
+              shipped config zoo — catches the "works in interpret mode,
+              fails Mosaic lowering" class before real-TPU validation.
+  ``purity``  (:mod:`.purity`)  AST import-graph layering lint: the
+              scheduler host layer is jax-free, kernels never import
+              serve, configs are effect-free, paged.py's jax import is
+              lazy.
+  ``retrace`` (:mod:`.retrace`)  trace-budget rules: observed
+              ``trace_counts`` from a dry engine run vs the declared
+              bucket set, and closure-captured array/container operands
+              that would bloat or silently invalidate traces.
+
+Each rule is a callable ``fn(ctx) -> list[Finding]`` registered with
+:func:`rule`.  ``Finding(severity="error")`` fails the CLI; rules that
+cannot run in the current environment (e.g. tp pins on a 1-device host)
+emit ``severity="skip"`` instead of silently passing.
+
+This module itself imports neither jax nor numpy — ``purity`` checks
+stay importable from pure-host contexts; the jax-heavy rule modules are
+imported lazily by :func:`load_rules`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import json
+import os
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Finding",
+    "Rule",
+    "Context",
+    "rule",
+    "registered_rules",
+    "load_rules",
+    "run_rules",
+    "RULE_FAMILIES",
+    "DEFAULT_VMEM_BUDGET_BYTES",
+    "DEFAULT_SMEM_BUDGET_BYTES",
+]
+
+RULE_FAMILIES = ("jaxpr", "vmem", "purity", "retrace")
+
+# ~16 MB usable VMEM per TPU core (pallas guide "Memory Hierarchy");
+# SMEM is "small" — we budget 256 KiB for scalar-prefetch tables, which
+# is far below any real limit but far above any sane table size.
+DEFAULT_VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+DEFAULT_SMEM_BUDGET_BYTES = 256 * 1024
+
+_SRC_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+@dataclasses.dataclass
+class Finding:
+    """One structured analyzer result.
+
+    ``severity``: ``error`` (fails the CLI), ``warning`` (reported, does
+    not fail), ``info`` (table/metric rows), ``skip`` (rule could not
+    run here — visible so a green run never silently means "not
+    checked").
+    """
+    rule: str
+    severity: str
+    obj: str                       # what the finding is about
+    message: str
+    data: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"rule": self.rule, "severity": self.severity,
+                "obj": self.obj, "message": self.message, "data": self.data}
+
+
+@dataclasses.dataclass
+class Rule:
+    name: str                      # e.g. "vmem.budget"
+    family: str                    # one of RULE_FAMILIES
+    fn: Callable[["Context"], List[Finding]]
+    doc: str
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def rule(name: str, family: str):
+    """Register ``fn(ctx) -> list[Finding]`` under ``name``."""
+    assert family in RULE_FAMILIES, family
+
+    def deco(fn):
+        _REGISTRY[name] = Rule(name, family, fn, (fn.__doc__ or "").strip())
+        return fn
+    return deco
+
+
+def registered_rules() -> Dict[str, Rule]:
+    return dict(_REGISTRY)
+
+
+def load_rules(families: Optional[Sequence[str]] = None) -> Dict[str, Rule]:
+    """Import the rule modules for ``families`` (default: all), which
+    registers their rules, and return the registry subset."""
+    families = tuple(families or RULE_FAMILIES)
+    mods = {"jaxpr": "jaxpr_rules", "vmem": "vmem", "purity": "purity",
+            "retrace": "retrace"}
+    for fam in families:
+        if fam not in mods:
+            raise ValueError(
+                f"unknown rule family {fam!r}; pick from {RULE_FAMILIES}")
+        importlib.import_module(f"repro.analysis.{mods[fam]}")
+    return {n: r for n, r in _REGISTRY.items() if r.family in families}
+
+
+@dataclasses.dataclass
+class Context:
+    """Everything a rule may consult.  The fixture hooks (``*_extra``,
+    ``purity_root``) exist so the analyzer's own tests can point it at
+    known-bad inputs and assert each rule fires."""
+    src_root: str = _SRC_ROOT
+    arch: str = "llama31_8b"        # smoke arch for engine-shaped rules
+    configs: Tuple[str, ...] = ()   # () → the full shipped zoo
+    vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES
+    smem_budget_bytes: int = DEFAULT_SMEM_BUDGET_BYTES
+    vmem_extra: Optional[str] = None    # path: module with TRACE_ENTRIES
+    jaxpr_extra: Optional[str] = None   # path: module with JAXPR_ENTRIES
+    purity_root: Optional[str] = None   # override source root for purity
+    _cache: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # ---- shared lazy fixtures (built once, reused across rules) ----
+    def smoke_model(self):
+        """(cfg, model, params) for the smoke arch — used by the
+        engine-shaped jaxpr and retrace rules."""
+        if "model" not in self._cache:
+            import dataclasses as dc
+
+            import jax
+
+            from repro.configs.base import get_smoke_config
+            from repro.models import build_model
+
+            cfg = dc.replace(get_smoke_config(self.arch), dtype="float32")
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            self._cache["model"] = (cfg, model, params)
+        return self._cache["model"]
+
+    def config_zoo(self) -> Tuple[str, ...]:
+        if self.configs:
+            return self.configs
+        from repro.configs.base import ARCH_IDS, PAPER_ARCH_IDS
+        return tuple(PAPER_ARCH_IDS) + tuple(ARCH_IDS)
+
+    def load_extra(self, path: str):
+        """Import a fixture module by file path (no sys.path games)."""
+        spec = importlib.util.spec_from_file_location(
+            "repro_analysis_fixture_" + os.path.basename(path).replace(
+                ".py", ""), path)
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        return mod
+
+
+def run_rules(ctx: Context,
+              families: Optional[Sequence[str]] = None,
+              names: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run the selected rules; a rule that raises becomes an ``error``
+    finding (the analyzer must never pass by crashing)."""
+    rules = load_rules(families)
+    if names:
+        unknown = set(names) - set(rules)
+        if unknown:
+            raise ValueError(f"unknown rules: {sorted(unknown)}")
+        rules = {n: rules[n] for n in names}
+    findings: List[Finding] = []
+    for name in sorted(rules):
+        try:
+            findings.extend(rules[name].fn(ctx))
+        except Exception as exc:  # noqa: BLE001 — reported, not swallowed
+            findings.append(Finding(
+                rule=name, severity="error", obj="analyzer",
+                message=f"rule crashed: {type(exc).__name__}: {exc}"))
+    return findings
+
+
+def findings_to_json(findings: Sequence[Finding], **extra) -> str:
+    by_sev: Dict[str, int] = {}
+    for f in findings:
+        by_sev[f.severity] = by_sev.get(f.severity, 0) + 1
+    doc = {"schema_version": 1,
+           "summary": by_sev,
+           "failed": by_sev.get("error", 0) > 0,
+           "findings": [f.to_dict() for f in findings]}
+    doc.update(extra)
+    return json.dumps(doc, indent=2, default=str)

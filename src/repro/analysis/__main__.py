@@ -1,0 +1,123 @@
+"""CLI for the static contract checker::
+
+    PYTHONPATH=src python -m repro.analysis \
+        [--rules jaxpr,vmem,purity,retrace] [--json-out analysis.json]
+
+Exit status 1 iff any ``error`` finding was produced (rules that cannot
+run here emit ``skip`` findings, which are reported but do not fail —
+a green run that silently checked nothing is its own bug class).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import (DEFAULT_SMEM_BUDGET_BYTES,
+                            DEFAULT_VMEM_BUDGET_BYTES, RULE_FAMILIES,
+                            Context, findings_to_json, load_rules,
+                            run_rules)
+
+_SEV_ORDER = {"error": 0, "warning": 1, "skip": 2, "info": 3}
+
+
+def _parse_args(argv):
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static jaxpr/Pallas contract checker (no TPU needed)")
+    ap.add_argument("--rules", default=",".join(RULE_FAMILIES),
+                    help="comma-separated rule families (default: all of "
+                         f"{','.join(RULE_FAMILIES)}) and/or full rule "
+                         "names like vmem.budget")
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="write the structured findings document here")
+    ap.add_argument("--list", action="store_true",
+                    help="list the selected rules and exit")
+    ap.add_argument("--arch", default="llama31_8b",
+                    help="smoke arch for engine-shaped rules")
+    ap.add_argument("--configs", default=None,
+                    help="comma-separated config ids for the vmem sweep "
+                         "(default: the full shipped zoo)")
+    ap.add_argument("--vmem-budget-mib", type=float,
+                    default=DEFAULT_VMEM_BUDGET_BYTES / 2**20,
+                    help="per-core VMEM budget in MiB (default 16)")
+    ap.add_argument("--smem-budget-kib", type=float,
+                    default=DEFAULT_SMEM_BUDGET_BYTES / 2**10,
+                    help="per-core SMEM budget in KiB (default 256)")
+    ap.add_argument("--vmem-table", action="store_true",
+                    help="print the per-kernel worst-case footprint table "
+                         "(the source of the kernels/__init__.py doc "
+                         "table) and exit")
+    # fixture hooks — the analyzer's own tests point these at known-bad
+    # inputs and assert each rule fires
+    ap.add_argument("--vmem-extra", default=None, metavar="PY",
+                    help="extra module with TRACE_ENTRIES for the vmem "
+                         "sweep")
+    ap.add_argument("--jaxpr-extra", default=None, metavar="PY",
+                    help="extra module with JAXPR_ENTRIES for the "
+                         "pool-containment pin")
+    ap.add_argument("--purity-root", default=None, metavar="DIR",
+                    help="source root for the purity pass (default: the "
+                         "installed repro tree)")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = _parse_args(argv)
+    selected = [tok.strip() for tok in args.rules.split(",") if tok.strip()]
+    families = [t for t in selected if "." not in t]
+    names = [t for t in selected if "." in t]
+    for fam in families:
+        if fam not in RULE_FAMILIES:
+            print(f"error: unknown rule family {fam!r} "
+                  f"(families: {', '.join(RULE_FAMILIES)})",
+                  file=sys.stderr)
+            return 2
+    if names and not families:
+        # full rule names imply their families
+        families = sorted({n.split(".", 1)[0] for n in names})
+
+    if args.list:
+        for name, r in sorted(load_rules(families).items()):
+            print(f"{name:28s} {r.doc.splitlines()[0] if r.doc else ''}")
+        return 0
+
+    ctx = Context(
+        arch=args.arch,
+        configs=tuple(args.configs.split(",")) if args.configs else (),
+        vmem_budget_bytes=int(args.vmem_budget_mib * 2**20),
+        smem_budget_bytes=int(args.smem_budget_kib * 2**10),
+        vmem_extra=args.vmem_extra,
+        jaxpr_extra=args.jaxpr_extra,
+        purity_root=args.purity_root,
+    )
+
+    if args.vmem_table:
+        from repro.analysis.vmem import footprint_table
+        rows = footprint_table(ctx.config_zoo())
+        w = max(len(r["entry"]) for r in rows)
+        for r in rows:
+            grid = "x".join(str(g) for g in r["grid"])
+            print(f"{r['entry']:{w}s}  {r['vmem_bytes'] / 2**20:7.2f} MiB"
+                  f"  smem {r['smem_bytes']:6d} B"
+                  f"  worst: {r['config']} grid=({grid})")
+        return 0
+
+    findings = run_rules(ctx, families=families, names=names or None)
+    findings.sort(key=lambda f: (_SEV_ORDER.get(f.severity, 9), f.rule))
+    for f in findings:
+        print(f"[{f.severity.upper():5s}] {f.rule}: {f.obj} — {f.message}")
+    n_err = sum(1 for f in findings if f.severity == "error")
+    n_skip = sum(1 for f in findings if f.severity == "skip")
+    print(f"\n{len(findings)} finding(s): {n_err} error(s), "
+          f"{n_skip} skipped rule(s)")
+
+    if args.json_out:
+        doc = findings_to_json(findings, rules=args.rules)
+        with open(args.json_out, "w", encoding="utf-8") as fh:
+            fh.write(doc + "\n")
+        print(f"wrote {args.json_out}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,118 @@
+"""Shared jaxpr traversal for dispatch-layer contracts.
+
+Several invariants in this repo are statements about what a traced
+program *lowers to* (exactly one ``pallas_call`` per projection, zero
+pool-view gathers/scatters outside kernels, no stray effects).  They all
+need the same recursive walk over sub-jaxprs (scan / pjit / remat /
+custom_vjp / shard_map carry their bodies in eqn params), so the walk —
+and the counters built on it — lives here once.  jax API drift in jaxpr
+internals (this repo already shims 0.4.37 drift elsewhere) then has a
+single place to land.
+
+Promoted from ``tests/jaxpr_utils.py`` (ISSUE 9): the test helpers
+``_count_pallas_calls`` / ``_pool_gather_count`` / ``_pool_eqn_count``
+that used to be copy-pasted across suites are now the public
+:func:`count_pallas_calls` / :func:`pool_eqn_count`; a thin re-export
+shim remains in ``tests/`` for old imports.
+
+This module deliberately does NOT import jax — it only walks objects it
+is handed, so the pure-host analysis rules can import it freely.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, Iterator, Set, Tuple, Union
+
+__all__ = [
+    "iter_eqns",
+    "count_pallas_calls",
+    "has_pallas_call",
+    "pallas_call_eqns",
+    "pool_eqn_count",
+    "eqn_dtypes",
+]
+
+
+def unwrap_jaxpr(j):
+    """ClosedJaxpr → Jaxpr (anything with ``.eqns`` passes through)."""
+    return j.jaxpr if hasattr(j, "jaxpr") else j
+
+
+def iter_eqns(jaxpr) -> Iterator[Any]:
+    """Yield every equation in ``jaxpr`` and, recursively, in any jaxpr
+    nested inside equation params (ClosedJaxpr, Jaxpr, or lists thereof).
+    Accepts a ClosedJaxpr or a raw Jaxpr."""
+    jaxpr = unwrap_jaxpr(jaxpr)
+
+    def sub(v):
+        if hasattr(v, "jaxpr"):              # ClosedJaxpr
+            return [v.jaxpr]
+        if hasattr(v, "eqns"):               # Jaxpr
+            return [v]
+        if isinstance(v, (tuple, list)):
+            out = []
+            for item in v:
+                out.extend(sub(item))
+            return out
+        return []
+
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for j in sub(v):
+                yield from iter_eqns(j)
+
+
+def pallas_call_eqns(jaxpr) -> Iterator[Any]:
+    """Every ``pallas_call`` equation anywhere in the program."""
+    for e in iter_eqns(jaxpr):
+        if e.primitive.name == "pallas_call":
+            yield e
+
+
+def count_pallas_calls(jaxpr) -> int:
+    return sum(1 for _ in pallas_call_eqns(jaxpr))
+
+
+def has_pallas_call(jaxpr) -> bool:
+    return any(True for _ in pallas_call_eqns(jaxpr))
+
+
+def _as_shape_set(shapes) -> Set[Tuple[int, ...]]:
+    """Accept one shape tuple or an iterable of them."""
+    if shapes and isinstance(next(iter(shapes)), int):
+        return {tuple(shapes)}
+    return {tuple(s) for s in shapes}
+
+
+def pool_eqn_count(
+    jaxpr,
+    pool_shapes: Union[Tuple[int, ...], Iterable[Tuple[int, ...]]],
+    prim: str = "gather",
+) -> int:
+    """Count ``prim`` equations (``gather``/``scatter`` & friends) whose
+    operands or outputs carry any of ``pool_shapes`` (the 4D KV pool or
+    its flattened row view), recursing into sub-jaxprs.
+
+    In-kernel refs are block-shaped, so anything this counts lives
+    OUTSIDE a ``pallas_call`` by construction — a nonzero count on a
+    kernels-on step program means a pool-sized gather/scatter escaped to
+    HBM.
+    """
+    shapes = _as_shape_set(pool_shapes)
+    return sum(
+        1 for eqn in iter_eqns(jaxpr)
+        if eqn.primitive.name == prim and any(
+            tuple(getattr(getattr(v, "aval", None), "shape", ()))
+            in shapes for v in list(eqn.invars) + list(eqn.outvars)))
+
+
+def eqn_dtypes(jaxpr) -> Set[str]:
+    """The set of dtype names appearing on any equation operand/output
+    anywhere in the program (used by the f64-leak rule)."""
+    seen: Set[str] = set()
+    for eqn in iter_eqns(jaxpr):
+        for v in list(eqn.invars) + list(eqn.outvars):
+            dt = getattr(getattr(v, "aval", None), "dtype", None)
+            if dt is not None:
+                seen.add(str(dt))
+    return seen

@@ -1,0 +1,304 @@
+"""Host/device purity lint — the AST import-graph pass behind the
+``purity`` rule family.
+
+The PR-8 layering contract, as code instead of a subprocess test:
+
+  * ``repro.serve.scheduler`` (and every module it pulls in at import
+    time, transitively) is **jax-free** — plans are numpy + ints, and a
+    jax import sneaking into the host layer would silently re-couple
+    admission logic to device state;
+  * ``repro.serve.metrics`` is jax-free the same way (it is consumed by
+    pure-host reporting paths);
+  * ``repro.serve.paged`` holds the **lazy-jax contract**: jax may be
+    imported only inside ``init_paged_cache`` (the one function that
+    builds device arrays) — never at module level, never from another
+    function;
+  * ``repro.serve.__init__`` stays lazy (PEP 562) — an eager re-export
+    would drag jax in for every host-layer importer;
+  * ``repro.kernels.*`` never imports ``repro.serve`` (kernels are the
+    bottom layer; the dispatch ladder lives in ``models``/``serve``);
+  * ``repro.configs.*`` are **effect-free**: module level is docstring +
+    imports (stdlib typing/dataclasses + ``repro.configs``) +
+    assignments + defs, nothing that could touch jax, I/O, or global
+    state at import time (jitted step functions close over configs
+    statically, so config import must be pure).
+
+Unlike the subprocess test this replaced, violations come back with the
+offending **import chain** (``scheduler → paged → X → jax``), and the
+pass needs no interpreter spawn — it parses source with ``ast`` only,
+so it runs (and is importable) without jax installed.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis import Context, Finding, rule
+
+__all__ = [
+    "ModuleImports",
+    "scan_tree",
+    "import_chain",
+    "check_jax_free",
+    "check_no_import",
+    "check_lazy_import",
+    "check_effect_free",
+    "run_layering",
+]
+
+
+@dataclasses.dataclass
+class ModuleImports:
+    """Import surface of one module, split by when the import runs."""
+    name: str                                 # dotted module name
+    path: str
+    module_level: Set[str]                    # imported at import time
+    deferred: Dict[str, Set[str]]             # function name -> imports
+    toplevel_statements: List[str] = dataclasses.field(default_factory=list)
+
+    def all_deferred(self) -> Set[str]:
+        out: Set[str] = set()
+        for mods in self.deferred.values():
+            out |= mods
+        return out
+
+
+_EFFECT_FREE_NODES = (ast.Import, ast.ImportFrom, ast.Assign, ast.AnnAssign,
+                      ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+
+
+class _ImportVisitor(ast.NodeVisitor):
+    def __init__(self):
+        self.module_level: Set[str] = set()
+        self.deferred: Dict[str, Set[str]] = {}
+        self._fn_stack: List[str] = []
+
+    def _sink(self) -> Set[str]:
+        if self._fn_stack:
+            return self.deferred.setdefault(self._fn_stack[0], set())
+        return self.module_level
+
+    def visit_Import(self, node):
+        for alias in node.names:
+            self._sink().add(alias.name)
+
+    def visit_ImportFrom(self, node):
+        if node.level:       # relative import — resolve later if needed;
+            return           # the repo uses absolute imports throughout
+        mod = node.module or ""
+        sink = self._sink()
+        sink.add(mod)
+        # ``from pkg import sub`` may bind a submodule: record the
+        # candidate so layering sees pkg.sub edges too (harmless when it
+        # is just an attribute — the module simply won't exist on disk)
+        for alias in node.names:
+            if alias.name != "*":
+                sink.add(f"{mod}.{alias.name}")
+
+    def visit_FunctionDef(self, node):
+        self._fn_stack.append(node.name)
+        self.generic_visit(node)
+        self._fn_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node):
+        # lambdas defer their body like functions do
+        self._fn_stack.append("<lambda>")
+        self.generic_visit(node)
+        self._fn_stack.pop()
+
+
+def _module_name(root: str, path: str) -> str:
+    rel = os.path.relpath(path, root)
+    parts = rel[:-3].split(os.sep)          # strip .py
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def scan_tree(root: str) -> Dict[str, ModuleImports]:
+    """Parse every ``.py`` under ``root`` into a ModuleImports map keyed
+    by dotted module name (``root`` is the import root, e.g. ``src/``)."""
+    out: Dict[str, ModuleImports] = {}
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in filenames:
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            with open(path, "r", encoding="utf-8") as fh:
+                try:
+                    tree = ast.parse(fh.read(), filename=path)
+                except SyntaxError as exc:
+                    raise SyntaxError(f"{path}: {exc}") from exc
+            v = _ImportVisitor()
+            v.visit(tree)
+            name = _module_name(root, path)
+            stmts = [type(n).__name__ for n in tree.body]
+            out[name] = ModuleImports(name, path, v.module_level,
+                                      v.deferred, stmts)
+    return out
+
+
+def _expand_with_packages(name: str) -> List[str]:
+    """Importing ``a.b.c`` also executes ``a`` and ``a.b`` __init__s."""
+    parts = name.split(".")
+    return [".".join(parts[:i]) for i in range(1, len(parts) + 1)]
+
+
+def import_chain(tree: Dict[str, ModuleImports], start: str,
+                 banned_prefix: str) -> Optional[List[str]]:
+    """BFS over *module-level* import edges from ``start``; return the
+    shortest chain ``[start, ..., offender, banned_module]`` reaching a
+    module whose name is/starts with ``banned_prefix``, or None."""
+    def hits(mod: str) -> bool:
+        return mod == banned_prefix or mod.startswith(banned_prefix + ".")
+
+    seen: Set[str] = set()
+    # importing a.b.c executes a and a.b __init__s too — seed them all
+    queue: List[List[str]] = [[s] for s in _expand_with_packages(start)
+                              if s == start or s in tree]
+    while queue:
+        chain = queue.pop(0)
+        mod = chain[-1]
+        if mod in seen:
+            continue
+        seen.add(mod)
+        info = tree.get(mod)
+        if info is None:
+            continue
+        for imp in sorted(info.module_level):
+            if hits(imp):
+                return chain + [imp]
+            for sub in _expand_with_packages(imp):
+                if sub in tree and sub not in seen:
+                    queue.append(chain + [sub])
+    return None
+
+
+def check_jax_free(tree: Dict[str, ModuleImports], module: str,
+                   banned: str = "jax") -> Optional[List[str]]:
+    """None when ``module`` (transitively, at import time) never pulls in
+    ``banned``; otherwise the offending chain."""
+    return import_chain(tree, module, banned)
+
+
+def check_no_import(tree: Dict[str, ModuleImports], modules: Sequence[str],
+                    banned_prefix: str) -> List[Tuple[str, List[str]]]:
+    """Chains for every module in ``modules`` that reaches
+    ``banned_prefix`` at import time."""
+    out = []
+    for m in modules:
+        chain = import_chain(tree, m, banned_prefix)
+        if chain is not None:
+            out.append((m, chain))
+    return out
+
+
+def check_lazy_import(info: ModuleImports, banned: str,
+                      allowed_fns: Sequence[str]) -> List[str]:
+    """Violations of a lazy-import contract: ``banned`` must appear
+    neither at module level nor in any function outside ``allowed_fns``."""
+    def hits(mods: Set[str]) -> bool:
+        return any(m == banned or m.startswith(banned + ".") for m in mods)
+
+    problems = []
+    if hits(info.module_level):
+        problems.append(f"{info.name} imports {banned} at module level")
+    for fn, mods in sorted(info.deferred.items()):
+        if fn not in allowed_fns and hits(mods):
+            problems.append(
+                f"{info.name}.{fn} imports {banned} (only "
+                f"{'/'.join(allowed_fns)} may)")
+    return problems
+
+
+# stdlib surface a config module may touch; anything else (jax, numpy,
+# os, ...) is an import-time effect risk
+_CONFIG_ALLOWED_IMPORTS = ("__future__", "dataclasses", "typing",
+                           "importlib", "repro.configs")
+_CONFIG_ALLOWED_NODES = _EFFECT_FREE_NODES + (ast.Expr,)
+
+
+def check_effect_free(info: ModuleImports) -> List[str]:
+    """Effect-free contract for config modules: only benign imports and
+    only declarative top-level statement kinds."""
+    problems = []
+    for imp in sorted(info.module_level):
+        if not any(imp == a or imp.startswith(a + ".")
+                   for a in _CONFIG_ALLOWED_IMPORTS):
+            problems.append(f"{info.name} imports {imp} at module level "
+                            f"(configs may import only "
+                            f"{', '.join(_CONFIG_ALLOWED_IMPORTS)})")
+    with open(info.path, "r", encoding="utf-8") as fh:
+        tree = ast.parse(fh.read(), filename=info.path)
+    for i, node in enumerate(tree.body):
+        if isinstance(node, ast.Expr) and i == 0 and isinstance(
+                node.value, ast.Constant) and isinstance(node.value.value,
+                                                         str):
+            continue                       # module docstring
+        if not isinstance(node, _EFFECT_FREE_NODES):
+            problems.append(
+                f"{info.name}:{node.lineno} top-level {type(node).__name__} "
+                "statement (configs must be declarative)")
+    return problems
+
+
+def run_layering(root: str) -> List[Finding]:
+    """Apply the full layering spec to a source tree and return findings.
+    Modules missing from ``root`` are skipped (so the fixture trees in
+    tests, which mimic only a slice of the repo, still exercise rules)."""
+    tree = scan_tree(root)
+    findings: List[Finding] = []
+
+    def err(rule_name, obj, msg, **data):
+        findings.append(Finding(rule=rule_name, severity="error", obj=obj,
+                                message=msg, data=data))
+
+    # 1. host scheduler layer (and the lazy serve __init__) is jax-free
+    for mod in ("repro.serve.scheduler", "repro.serve.metrics",
+                "repro.serve"):
+        if mod not in tree:
+            continue
+        chain = check_jax_free(tree, mod)
+        if chain is not None:
+            err("purity.scheduler-jax-free", mod,
+                f"host-layer module {mod} reaches jax at import time: "
+                + " -> ".join(chain), chain=chain)
+
+    # 2. paged.py lazy-jax contract
+    paged = tree.get("repro.serve.paged")
+    if paged is not None:
+        for msg in check_lazy_import(paged, "jax", ("init_paged_cache",)):
+            err("purity.paged-lazy-jax", "repro.serve.paged", msg)
+
+    # 3. kernels never import serve
+    kernel_mods = [m for m in tree if m == "repro.kernels"
+                   or m.startswith("repro.kernels.")]
+    for mod, chain in check_no_import(tree, kernel_mods, "repro.serve"):
+        err("purity.kernels-no-serve", mod,
+            f"kernel module {mod} reaches repro.serve at import time: "
+            + " -> ".join(chain), chain=chain)
+
+    # 4. configs are effect-free
+    cfg_mods = [m for m in tree if m.startswith("repro.configs.")]
+    for mod in sorted(cfg_mods):
+        for msg in check_effect_free(tree[mod]):
+            err("purity.configs-effect-free", mod, msg)
+
+    if not findings:
+        findings.append(Finding(
+            rule="purity.layering", severity="info", obj=root,
+            message=f"layering clean over {len(tree)} modules",
+            data={"modules": len(tree)}))
+    return findings
+
+
+@rule("purity.layering", family="purity")
+def rule_layering(ctx: Context) -> List[Finding]:
+    """Host/device layering: jax-free scheduler scope, lazy paged jax,
+    kernels below serve, effect-free configs."""
+    return run_layering(ctx.purity_root or ctx.src_root)

@@ -97,6 +97,28 @@ always used for windowed paged shapes and non-tile-divisible query
 counts).  Both directions carry chaos-harness sites
 (``kernel.paged_attention``, ``kernel.paged_scatter``).
 
+Static VMEM footprints (worst case across the shipped config zoo, from
+``PYTHONPATH=src python -m repro.analysis --vmem-table`` — regenerate
+after changing any BlockSpec/grid/scratch; the ``vmem.budget`` analyzer
+rule fails CI past 16 MiB/core).  The estimate is 2x the in/out block
+bytes (Mosaic double buffering) + VMEM scratch; SMEM carries the
+scalar-prefetched block tables:
+
+  kernel               VMEM       SMEM     worst config, grid
+  flash_attention       1.13 MiB     0 B   recurrentgemma_2b (1,10,8,8)
+  nm_prune              2.00 MiB     0 B   llama31_8b        (1,8)
+  nm_prune_matmul       2.76 MiB     0 B   llama31_8b        (1,56,8)
+  nm_spmm               8.77 MiB     0 B   llama31_8b        (1,56,2)
+  osparse_matmul        2.01 MiB     0 B   llama31_8b        (1,56,16)
+  osparse_w8a8_decode   0.32 MiB     0 B   llama31_8b        (1,56,8)
+  paged_attention       0.69 MiB  8256 B   recurrentgemma_2b (8,10,2,256)
+  paged_kv_scatter     10.00 MiB  8256 B   rwkv6_7b          (8,9)
+  w8a8_matmul           1.25 MiB     0 B   llama31_8b        (1,56,8)
+
+(``paged_kv_scatter``'s bound holds because the wrapper splits chunks
+whose resident tile would exceed ~2 MiB/leaf into sub-chunk calls —
+MHA-width caches at chunk 256 used to hit 18 MiB.)
+
 ``ops``  — jit'd wrappers (batched, padded, interpret-mode switch)
 ``ref``  — pure-jnp oracles used by the allclose test sweeps
 """

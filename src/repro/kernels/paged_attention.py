@@ -248,6 +248,17 @@ def _scatter_kernel(tab_ref, pos_ref, len_ref,          # scalar prefetch
             out_ref[0] = jnp.where(wr, rows, cur)
 
 
+# VMEM cap for the resident chunk tile of one scatter call, per K/V leaf.
+# The scatter kernel keeps the whole (1, T, Hkv, hd) chunk block in VMEM at
+# every grid step; at T=256 an MHA-width cache row (e.g. 64 heads x 64 dims,
+# 16 KiB/row f32) makes that 2 x 4 MiB double-buffered — past the ~16 MiB
+# per-core budget once the pool blocks ride along (surfaced by
+# ``repro.analysis.vmem``).  Chunks whose tile would exceed this split into
+# bounded sub-chunk calls below; each sub-call writes a disjoint row span,
+# so the result is bit-identical to the single-call form.
+_MAX_CHUNK_TILE_BYTES = 2 * 1024 * 1024
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_kv_scatter_pallas(
     k_new: jax.Array,         # (B, T, Hkv, hd) chunk K (decode: T == 1)
@@ -269,11 +280,38 @@ def paged_kv_scatter_pallas(
 
     Rows whose target block is unallocated (-1) or out of table range are
     dropped, matching the jnp oracle's ``mode="drop"`` fence.
+
+    Chunks whose resident tile would blow the static VMEM budget are
+    split into sub-chunk calls of at most ``ts`` rows (static Python
+    loop, still zero pool-shaped ops outside ``pallas_call``): sub-call
+    ``i`` re-bases ``pos``/``chunk_len`` by its row offset and chains the
+    aliased pools, so untouched blocks pass through unchanged.
     """
     b, t = k_new.shape[:2]
     nb, bs, hkv, hd = k_pool.shape
-    mb = block_table.shape[1]
     assert v_new.shape == k_new.shape and v_pool.shape == k_pool.shape
+
+    row_bytes = hkv * hd * k_new.dtype.itemsize
+    ts = max(1, min(t, _MAX_CHUNK_TILE_BYTES // row_bytes))
+    if ts < t:
+        posv = pos.astype(jnp.int32)
+        cl = chunk_len.astype(jnp.int32)
+        for off in range(0, t, ts):
+            sl = slice(off, min(off + ts, t))
+            k_pool, v_pool = _scatter_call(
+                k_new[:, sl], v_new[:, sl], k_pool, v_pool, block_table,
+                posv + off, jnp.clip(cl - off, 0, sl.stop - off), interpret)
+        return k_pool, v_pool
+    return _scatter_call(k_new, v_new, k_pool, v_pool, block_table,
+                         pos, chunk_len, interpret)
+
+
+def _scatter_call(k_new, v_new, k_pool, v_pool, block_table, pos,
+                  chunk_len, interpret):
+    """One bounded-tile scatter ``pallas_call`` (see the public wrapper)."""
+    b, t = k_new.shape[:2]
+    nb, bs, hkv, hd = k_pool.shape
+    mb = block_table.shape[1]
     # an unaligned T-row chunk spans at most this many logical blocks
     n_lb = min((t - 1) // bs + 2, t)
 

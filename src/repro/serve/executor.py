@@ -34,7 +34,33 @@ from repro.serve.faults import KernelFault
 from repro.serve.paged import init_paged_cache
 from repro.serve.scheduler import StepPlan
 
-__all__ = ["Executor", "StepResult"]
+__all__ = ["Executor", "StepResult", "STEP_BUCKETS", "declared_trace_keys"]
+
+# The fused one-dispatch step buckets, keyed (replay, has_prefill,
+# has_decode) — static phase presence (PR 7).  This table is THE
+# enumeration: ``Executor.__init__`` builds one program (plus its jnp
+# oracle twin) per row, and ``repro.analysis`` sweeps its jaxpr/trace
+# rules over exactly these buckets, so adding a bucket here is
+# automatically adding it to the checked contract.
+STEP_BUCKETS: Dict[Tuple[bool, bool, bool], str] = {
+    (False, True, False): "step_prefill",
+    (False, True, True): "step_prefill_decode",
+    (False, False, True): "step_decode",
+    (True, True, False): "step_replay",
+    (True, True, True): "step_replay_decode",
+}
+
+# legacy two-program split (still served by ``prefill()``/``decode()``)
+_LEGACY_TRACE_KEYS = ("prefill", "prefill_replay", "decode")
+
+
+def declared_trace_keys() -> Tuple[str, ...]:
+    """Every ``trace_counts`` key an :class:`Executor` may legitimately
+    record: the fused buckets, the legacy split, and the ``_oracle``
+    degradation twins of each.  The retrace rule treats any key outside
+    this set as an undeclared (hence unbounded) trace bucket."""
+    base = tuple(STEP_BUCKETS.values()) + _LEGACY_TRACE_KEYS
+    return base + tuple(k + "_oracle" for k in base)
 
 
 @dataclasses.dataclass
@@ -220,24 +246,21 @@ class Executor:
                 return ptok, nxt, cache, ok
             return step_fn
 
-        # raw (unjitted) step fns are kept for the jaxpr pins in tests —
-        # ``step_program(bucket)`` is the public accessor
+        # raw (unjitted) step fns are kept for the jaxpr pins in tests and
+        # repro.analysis — ``step_program(bucket)`` is the public accessor
         self._step_raw: Dict[tuple, Callable] = {}
+        self._step_oracle_raw: Dict[tuple, Callable] = {}
         self._step_jits: Dict[tuple, Callable] = {}
         self._step_oracle_jits: Dict[tuple, Callable] = {}
-        for replay, hp, hd in ((False, True, False), (False, True, True),
-                               (False, False, True), (True, True, False),
-                               (True, True, True)):
-            name = "step" + ("_replay" if replay else
-                             ("_prefill" if hp else "")) \
-                + ("_decode" if hd else "")
+        for key, name in STEP_BUCKETS.items():
+            replay, hp, hd = key
             pf = dense if replay else policy
             opf = DENSE if replay else opolicy
-            key = (replay, hp, hd)
             self._step_raw[key] = make_step_fn(pf, dense, name, hp, hd)
+            self._step_oracle_raw[key] = make_step_fn(
+                opf, DENSE, name + "_oracle", hp, hd)
             self._step_jits[key] = jax.jit(self._step_raw[key])
-            self._step_oracle_jits[key] = jax.jit(
-                make_step_fn(opf, DENSE, name + "_oracle", hp, hd))
+            self._step_oracle_jits[key] = jax.jit(self._step_oracle_raw[key])
 
     # ------------------------------------------------------------- sampling
     def _sample(self, logits, key):
@@ -363,7 +386,12 @@ class Executor:
         return np.asarray(nxt)
 
     # ----------------------------------------------------------- test hooks
-    def step_program(self, bucket: Tuple[bool, bool, bool]):
+    def step_program(self, bucket: Tuple[bool, bool, bool],
+                     oracle: bool = False):
         """The raw (unjitted) step program for a phase-presence bucket —
-        a pure function of its operands, used by the jaxpr purity pins."""
-        return self._step_raw[bucket]
+        a pure function of its operands, used by the jaxpr purity pins
+        (buckets enumerated by :data:`STEP_BUCKETS`).  ``oracle=True``
+        returns the bit-exact jnp degradation twin, so the analyzer can
+        check the kernels-off program as well (and prove the kernels-on
+        pins aren't vacuously true)."""
+        return (self._step_oracle_raw if oracle else self._step_raw)[bucket]

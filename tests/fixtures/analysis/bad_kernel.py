@@ -1,0 +1,31 @@
+"""Known-bad kernel for the vmem.budget rule: a copy kernel whose
+BlockSpec keeps a full 4096x4096 f32 operand (64 MiB) resident per grid
+step — 256 MiB double-buffered, way past any per-core VMEM budget.
+Loaded by ``python -m repro.analysis --vmem-extra`` in the analyzer's
+own tests, which assert the rule fires."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SHAPE = (4096, 4096)
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def oversized_copy(x):
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec(_SHAPE, lambda i: (0, 0))],
+        out_specs=pl.BlockSpec(_SHAPE, lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct(_SHAPE, jnp.float32),
+        interpret=True,
+    )(x)
+
+
+TRACE_ENTRIES = [
+    ("oversized_copy", oversized_copy,
+     (jax.ShapeDtypeStruct(_SHAPE, jnp.float32),)),
+]

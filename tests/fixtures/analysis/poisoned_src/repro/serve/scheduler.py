@@ -1,0 +1,5 @@
+"""Fixture: a scheduler that re-couples the host layer to device state.
+The purity.scheduler-jax-free rule must flag this tree."""
+import jax  # noqa: F401  — the violation under test
+
+PLANS = []

@@ -1,31 +1,12 @@
-"""Shared jaxpr traversal for dispatch-layer assertions.
-
-Several suites assert what a traced program *lowers to* (exactly one
-pallas_call, zero pool-view gathers, ...).  They all need the same
-recursive walk over sub-jaxprs (scan / pjit / remat / custom_vjp carry
-their bodies in eqn params), so the walk lives here once — jax API drift
-in jaxpr internals (this repo already shims 0.4.37 drift elsewhere) then
-has a single place to land.
-"""
-
-
-def iter_eqns(jaxpr):
-    """Yield every equation in ``jaxpr`` and, recursively, in any jaxpr
-    nested inside equation params (ClosedJaxpr, Jaxpr, or lists thereof)."""
-    def sub(v):
-        if hasattr(v, "jaxpr"):              # ClosedJaxpr
-            return [v.jaxpr]
-        if hasattr(v, "eqns"):               # Jaxpr
-            return [v]
-        if isinstance(v, (tuple, list)):
-            out = []
-            for item in v:
-                out.extend(sub(item))
-            return out
-        return []
-
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            for j in sub(v):
-                yield from iter_eqns(j)
+"""Thin re-export shim: the jaxpr traversal library moved into the
+analysis subsystem (``repro.analysis.jaxpr_utils``, ISSUE 9) so the
+contract checker and the test suites share one walk.  Keep importing
+from here in tests; add new helpers THERE, not here."""
+from repro.analysis.jaxpr_utils import (  # noqa: F401
+    count_pallas_calls,
+    eqn_dtypes,
+    has_pallas_call,
+    iter_eqns,
+    pallas_call_eqns,
+    pool_eqn_count,
+)

@@ -172,10 +172,7 @@ def test_ops_wrappers_survive_padding_shapes(rng):
 
 # ----------------------------------------------------------- dispatch layer
 
-def _count_pallas_calls(jaxpr) -> int:
-    from jaxpr_utils import iter_eqns
-    return sum(1 for e in iter_eqns(jaxpr)
-               if e.primitive.name == "pallas_call")
+from jaxpr_utils import count_pallas_calls as _count_pallas_calls  # noqa: E402
 
 
 def test_sparse_linear_lowers_to_single_pallas_call(rng):

@@ -164,17 +164,7 @@ def test_env_override_forces_dispatch_mode(tiny, monkeypatch):
 
 # --------------------------------------------------- jaxpr dispatch pins
 
-def _pool_eqn_count(jaxpr, pool_shapes, prim: str) -> int:
-    """Count ``prim`` equations touching a pool-shaped operand (any of
-    ``pool_shapes`` — the 4D pool or its flattened row view) anywhere in
-    the program.  In-kernel refs are block-shaped, so anything this counts
-    lives OUTSIDE a pallas_call by construction."""
-    from jaxpr_utils import iter_eqns
-    return sum(
-        1 for eqn in iter_eqns(jaxpr)
-        if eqn.primitive.name == prim and any(
-            tuple(getattr(getattr(v, "aval", None), "shape", ()))
-            in pool_shapes for v in list(eqn.invars) + list(eqn.outvars)))
+from jaxpr_utils import pool_eqn_count as _pool_eqn_count  # noqa: E402
 
 
 def test_step_program_pool_ops_stay_in_kernel(tiny):

@@ -214,9 +214,7 @@ def test_paged_attention_kernel_gqa_and_single_head(rng):
 
 # --------------------------------------------- windowed flash self-attention
 
-def _has_pallas_call(jaxpr) -> bool:
-    from jaxpr_utils import iter_eqns
-    return any(e.primitive.name == "pallas_call" for e in iter_eqns(jaxpr))
+from jaxpr_utils import has_pallas_call as _has_pallas_call  # noqa: E402
 
 
 @pytest.mark.parametrize("t,d,w", [(128, 32, 32), (256, 64, 96)])

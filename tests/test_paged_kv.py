@@ -356,14 +356,8 @@ def test_unallocated_block_fence_survives_poison():
 # -------------------------------------- no full-view gather on the hot path
 
 def _pool_gather_count(jaxpr, pool_shape) -> int:
-    """Count ``gather`` equations (jnp.take & friends) reading an operand
-    of the pooled-KV shape, recursing into sub-jaxprs (scan/pjit/remat)."""
-    from jaxpr_utils import iter_eqns
-    return sum(
-        1 for eqn in iter_eqns(jaxpr)
-        if eqn.primitive.name == "gather" and any(
-            tuple(getattr(getattr(v, "aval", None), "shape", ()))
-            == pool_shape for v in eqn.invars))
+    from jaxpr_utils import pool_eqn_count
+    return pool_eqn_count(jaxpr, pool_shape, "gather")
 
 
 def test_paged_hot_path_has_no_full_view_gather(tiny):

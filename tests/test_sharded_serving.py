@@ -81,7 +81,31 @@ def _run_dp(model, params, cfg, prompts, arrivals, *, dp, faults=None,
 def test_scheduler_layer_is_pure_host():
     """The Scheduler half of the split must stay importable without jax:
     its plans are the host-side contract, and a jax import sneaking in
-    would silently re-couple admission logic to device state."""
+    would silently re-couple admission logic to device state.  Asserted
+    through ``repro.analysis.purity`` (the AST import-graph pass the
+    ``python -m repro.analysis`` CLI runs), which also covers the
+    metrics module and paged.py's lazy-jax contract — and reports the
+    offending import chain instead of a bare subprocess exit code."""
+    from repro.analysis.purity import (check_jax_free, check_lazy_import,
+                                       scan_tree)
+    tree = scan_tree(_SRC)
+    for mod in ("repro.serve.scheduler", "repro.serve.metrics",
+                "repro.serve"):
+        assert mod in tree, f"{mod} missing from the scanned tree"
+        chain = check_jax_free(tree, mod)
+        assert chain is None, \
+            f"{mod} reaches jax at import time: {' -> '.join(chain)}"
+    # paged.py may import jax ONLY inside init_paged_cache (device
+    # arrays are built there and nowhere else)
+    problems = check_lazy_import(tree["repro.serve.paged"], "jax",
+                                 ("init_paged_cache",))
+    assert not problems, problems
+
+
+def test_analysis_purity_rule_matches_subprocess_truth():
+    """Ground-truth the AST pass once against a real interpreter: the
+    static claim "importing the scheduler never pulls in jax" must agree
+    with what an actual import does."""
     code = ("import sys; import repro.serve.scheduler; "
             "sys.exit(1 if 'jax' in sys.modules else 0)")
     proc = subprocess.run(
