@@ -17,6 +17,15 @@ name: a row whose ``us_per_call`` grew by more than ``threshold``
 the gate unless ``--no-regress-gate`` demotes regressions to warnings.
 Rows present in only one of the two runs are never regression-compared
 (the required-row scan already catches disappearances).
+
+Latest-vs-previous alone lets slow drift compound: N consecutive +40%
+steps each pass the 50% gate while the cumulative cost explodes (the
+ROADMAP notes ~25% interpret-mode drift already).  ``--since-seed
+BENCH_seed_cpu.json`` additionally gates the latest run's ``kernel/*``
+rows against the FIRST entry of the seed trajectory — the repo's
+original baseline — with a wider ``--seed-threshold`` (default 2.0,
+i.e. 3x the seed timing) that absorbs noise but caps total drift.
+Kernel rows added after the seed have no baseline and are skipped.
 """
 from __future__ import annotations
 
@@ -27,6 +36,7 @@ import sys
 from typing import List
 
 DEFAULT_REGRESS_THRESHOLD = 0.5
+DEFAULT_SEED_THRESHOLD = 2.0
 
 # one prefix per fused-kernel hot path benchmarked by kernel_bench.run()
 REQUIRED_KERNEL_ROWS = (
@@ -130,6 +140,44 @@ def check_regressions(path: str,
     return problems
 
 
+def check_since_seed(path: str, seed_path: str,
+                     threshold: float = DEFAULT_SEED_THRESHOLD
+                     ) -> List[str]:
+    """Latest run's ``kernel/*`` rows vs the FIRST entry of the seed
+    trajectory — the anti-compounding gate.  Returns one message per
+    kernel row whose ``us_per_call`` grew past ``threshold`` (fractional)
+    since the seed; seed-less rows (added later) are skipped, but an
+    unreadable/empty seed file is an error (a silently absent baseline
+    would turn the gate off)."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return []   # unreadable is check_trajectory's complaint, not ours
+    if not isinstance(data, list) or not data:
+        return []
+    try:
+        with open(seed_path) as f:
+            seed_data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{seed_path}: unreadable seed baseline ({e})"]
+    if not isinstance(seed_data, list) or not seed_data:
+        return [f"{seed_path}: not a non-empty seed trajectory"]
+    seed = {n: us for n, us in _finite_timings(seed_data[0]).items()
+            if n.startswith("kernel/")}
+    if not seed:
+        return [f"{seed_path}: seed entry has no finite kernel/* rows"]
+    cur = _finite_timings(data[-1])
+    problems = []
+    for name in sorted(set(seed) & set(cur)):
+        if cur[name] > seed[name] * (1.0 + threshold):
+            pct = 100.0 * (cur[name] / seed[name] - 1.0)
+            problems.append(
+                f"{name}: seed {seed[name]:.1f} -> {cur[name]:.1f} us/call "
+                f"(+{pct:.0f}% > {threshold:.0%} since-seed threshold)")
+    return problems
+
+
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else list(argv[1:])
     ap = argparse.ArgumentParser()
@@ -141,9 +189,20 @@ def main(argv=None) -> int:
     ap.add_argument("--no-regress-gate", action="store_true",
                     help="report regressions as warnings instead of "
                          "failing the gate")
+    ap.add_argument("--since-seed", default=None, metavar="SEED_JSON",
+                    help="also gate kernel/* rows of the latest run "
+                         "against the FIRST entry of this seed "
+                         "trajectory (anti-compounding drift gate)")
+    ap.add_argument("--seed-threshold", type=float,
+                    default=DEFAULT_SEED_THRESHOLD,
+                    help="max fractional us_per_call growth vs the seed "
+                         "baseline (wider than --threshold: cumulative)")
     args = ap.parse_args(argv)
     errors = check_trajectory(args.path)
     regressions = check_regressions(args.path, args.threshold)
+    if args.since_seed:
+        regressions += check_since_seed(args.path, args.since_seed,
+                                        args.seed_threshold)
     for e in errors:
         print(f"BENCH CHECK FAIL: {e}")
     for r in regressions:

@@ -31,6 +31,22 @@ Rule families (one module each):
               ``trace_counts`` from a dry engine run vs the declared
               bucket set, and closure-captured array/container operands
               that would bloat or silently invalidate traces.
+  ``races``   (:mod:`.grid_eval`)  symbolic grid evaluator: enumerates
+              every ``pallas_call``'s static grid (kernel zoo + all
+              ``STEP_BUCKETS`` step programs), concretely evaluates each
+              BlockSpec index map (scalar-prefetch tables included), and
+              checks output-revisit contiguity, aliased
+              refetch-after-write hazards, and block-index bounds.
+  ``hbm``     (:mod:`.hbm`)  machine-verified HBM cost model: measured
+              bytes per kernel call (block footprints × grid fetch/write
+              runs, refetch elision modelled) vs the closed-form
+              ``repro.kernels.COST_MODEL`` formulas, >10% divergence
+              fails; plus doc-table sync for ``kernels/__init__.py``.
+  ``numerics`` (:mod:`.numerics`)  jaxpr lints over kernel bodies: int8
+              GEMMs accumulate in i32/f32, computed quant-scale divisors
+              are zero-guarded, online-softmax bodies use the shared
+              finite ``_NEG`` guards (no ``-inf``), no f64, no
+              back-to-back dtype round-trip casts.
 
 Each rule is a callable ``fn(ctx) -> list[Finding]`` registered with
 :func:`rule`.  ``Finding(severity="error")`` fails the CLI; rules that
@@ -62,7 +78,8 @@ __all__ = [
     "DEFAULT_SMEM_BUDGET_BYTES",
 ]
 
-RULE_FAMILIES = ("jaxpr", "vmem", "purity", "retrace")
+RULE_FAMILIES = ("jaxpr", "vmem", "purity", "retrace", "races", "hbm",
+                 "numerics")
 
 # ~16 MB usable VMEM per TPU core (pallas guide "Memory Hierarchy");
 # SMEM is "small" — we budget 256 KiB for scalar-prefetch tables, which
@@ -124,7 +141,8 @@ def load_rules(families: Optional[Sequence[str]] = None) -> Dict[str, Rule]:
     registers their rules, and return the registry subset."""
     families = tuple(families or RULE_FAMILIES)
     mods = {"jaxpr": "jaxpr_rules", "vmem": "vmem", "purity": "purity",
-            "retrace": "retrace"}
+            "retrace": "retrace", "races": "grid_eval", "hbm": "hbm",
+            "numerics": "numerics"}
     for fam in families:
         if fam not in mods:
             raise ValueError(
@@ -146,6 +164,9 @@ class Context:
     vmem_extra: Optional[str] = None    # path: module with TRACE_ENTRIES
     jaxpr_extra: Optional[str] = None   # path: module with JAXPR_ENTRIES
     purity_root: Optional[str] = None   # override source root for purity
+    grid_extra: Optional[str] = None    # path: module with GRID_ENTRIES
+    numerics_extra: Optional[str] = None  # path: module w/ NUMERICS_ENTRIES
+    hbm_extra: Optional[str] = None     # path: module with COST_ENTRIES
     _cache: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     # ---- shared lazy fixtures (built once, reused across rules) ----

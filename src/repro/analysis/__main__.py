@@ -1,15 +1,25 @@
 """CLI for the static contract checker::
 
     PYTHONPATH=src python -m repro.analysis \
-        [--rules jaxpr,vmem,purity,retrace] [--json-out analysis.json]
+        [--rules jaxpr,vmem,races,hbm,...] [--severity error] \
+        [--baseline analysis_baseline.json] [--json-out analysis.json]
 
 Exit status 1 iff any ``error`` finding was produced (rules that cannot
 run here emit ``skip`` findings, which are reported but do not fail —
 a green run that silently checked nothing is its own bug class).
+
+``--rules`` accepts families, full rule names, and ``fnmatch`` globs
+over either (``races.*``, ``*zoo*``).  ``--severity`` filters the
+REPORT (errors still fail even when filtered out of the listing).
+``--baseline`` demotes known error findings — matched by
+``(rule, obj)`` — to warnings, so a pre-existing defect can be tracked
+without masking new ones.
 """
 from __future__ import annotations
 
 import argparse
+import fnmatch
+import json
 import sys
 
 from repro.analysis import (DEFAULT_SMEM_BUDGET_BYTES,
@@ -26,8 +36,18 @@ def _parse_args(argv):
         description="static jaxpr/Pallas contract checker (no TPU needed)")
     ap.add_argument("--rules", default=",".join(RULE_FAMILIES),
                     help="comma-separated rule families (default: all of "
-                         f"{','.join(RULE_FAMILIES)}) and/or full rule "
-                         "names like vmem.budget")
+                         f"{','.join(RULE_FAMILIES)}), full rule names "
+                         "like vmem.budget, or fnmatch globs over either "
+                         "(races.*, *zoo*)")
+    ap.add_argument("--severity", default=None, metavar="LEVEL",
+                    choices=sorted(_SEV_ORDER, key=_SEV_ORDER.get),
+                    help="only report findings at or above this severity "
+                         "(error > warning > skip > info); the exit code "
+                         "still reflects ALL errors")
+    ap.add_argument("--baseline", default=None, metavar="JSON",
+                    help="baseline file: error findings matching its "
+                         "(rule, obj) entries are demoted to warnings "
+                         "(tracked, not failing)")
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="write the structured findings document here")
     ap.add_argument("--list", action="store_true",
@@ -47,6 +67,9 @@ def _parse_args(argv):
                     help="print the per-kernel worst-case footprint table "
                          "(the source of the kernels/__init__.py doc "
                          "table) and exit")
+    ap.add_argument("--hbm-table", action="store_true",
+                    help="print the generated COST_MODEL doc table (the "
+                         "kernels/__init__.py HBM section) and exit")
     # fixture hooks — the analyzer's own tests point these at known-bad
     # inputs and assert each rule fires
     ap.add_argument("--vmem-extra", default=None, metavar="PY",
@@ -55,30 +78,106 @@ def _parse_args(argv):
     ap.add_argument("--jaxpr-extra", default=None, metavar="PY",
                     help="extra module with JAXPR_ENTRIES for the "
                          "pool-containment pin")
+    ap.add_argument("--grid-extra", default=None, metavar="PY",
+                    help="extra module with GRID_ENTRIES for the races "
+                         "grid checks")
+    ap.add_argument("--numerics-extra", default=None, metavar="PY",
+                    help="extra module with NUMERICS_ENTRIES for the "
+                         "kernel-body lints")
+    ap.add_argument("--hbm-extra", default=None, metavar="PY",
+                    help="extra module with COST_ENTRIES for the HBM "
+                         "cost-model check")
     ap.add_argument("--purity-root", default=None, metavar="DIR",
                     help="source root for the purity pass (default: the "
                          "installed repro tree)")
     return ap.parse_args(argv)
 
 
+def _select_rules(tokens):
+    """Resolve ``--rules`` tokens (families, rule names, globs) to
+    (families-to-load, rule-name-subset-or-None).  Unknown non-glob
+    tokens raise ValueError; a glob matching nothing does too (a typo'd
+    glob must not silently select zero checks)."""
+    fam_tokens = [t for t in tokens if "." not in t]
+    name_tokens = [t for t in tokens if "." in t]
+    globby = [t for t in fam_tokens if any(c in t for c in "*?[")]
+    exact_fams = [t for t in fam_tokens if t not in globby]
+    for fam in exact_fams:
+        if fam not in RULE_FAMILIES:
+            raise ValueError(
+                f"unknown rule family {fam!r} "
+                f"(families: {', '.join(RULE_FAMILIES)})")
+    families = set(exact_fams)
+    for g in globby:
+        got = fnmatch.filter(RULE_FAMILIES, g)
+        if not got:
+            raise ValueError(f"family glob {g!r} matches nothing")
+        families.update(got)
+
+    if not name_tokens:
+        return sorted(families) or None, None
+
+    # full rule names / globs: load their families, then filter names
+    fams_for_names = sorted({t.split(".", 1)[0].rstrip("*?[")
+                             for t in name_tokens})
+    load = sorted(families | {f for f in RULE_FAMILIES
+                              if any(f.startswith(p) for p in
+                                     fams_for_names)}) or None
+    all_rules = load_rules(load)
+    names = set()
+    for t in name_tokens:
+        if any(c in t for c in "*?["):
+            got = fnmatch.filter(all_rules, t)
+            if not got:
+                raise ValueError(f"rule glob {t!r} matches nothing")
+            names.update(got)
+        else:
+            if t not in all_rules:
+                raise ValueError(f"unknown rule {t!r}")
+            names.add(t)
+    # families selected alongside explicit names contribute all their rules
+    names.update(n for n, r in all_rules.items() if r.family in families)
+    return load, sorted(names)
+
+
+def _apply_baseline(findings, path: str) -> int:
+    """Demote error findings matching the baseline's (rule, obj) pairs
+    to warnings; returns how many were demoted.  The baseline document
+    is ``{"suppressions": [{"rule": ..., "obj": ..., "reason": ...}]}``."""
+    with open(path, encoding="utf-8") as fh:
+        doc = json.load(fh)
+    pairs = {(s["rule"], s["obj"]): s.get("reason", "")
+             for s in doc.get("suppressions", [])}
+    demoted = 0
+    for f in findings:
+        if f.severity == "error" and (f.rule, f.obj) in pairs:
+            f.severity = "warning"
+            f.data = dict(f.data, baselined=True,
+                          baseline_reason=pairs[(f.rule, f.obj)])
+            demoted += 1
+    return demoted
+
+
 def main(argv=None) -> int:
     args = _parse_args(argv)
-    selected = [tok.strip() for tok in args.rules.split(",") if tok.strip()]
-    families = [t for t in selected if "." not in t]
-    names = [t for t in selected if "." in t]
-    for fam in families:
-        if fam not in RULE_FAMILIES:
-            print(f"error: unknown rule family {fam!r} "
-                  f"(families: {', '.join(RULE_FAMILIES)})",
-                  file=sys.stderr)
-            return 2
-    if names and not families:
-        # full rule names imply their families
-        families = sorted({n.split(".", 1)[0] for n in names})
+    tokens = [tok.strip() for tok in args.rules.split(",") if tok.strip()]
+    try:
+        families, names = _select_rules(tokens)
+    except ValueError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
 
     if args.list:
-        for name, r in sorted(load_rules(families).items()):
+        rules = load_rules(families)
+        if names:
+            rules = {n: r for n, r in rules.items() if n in names}
+        for name, r in sorted(rules.items()):
             print(f"{name:28s} {r.doc.splitlines()[0] if r.doc else ''}")
+        return 0
+
+    if args.hbm_table:
+        from repro.kernels import cost_model_doc
+        print(cost_model_doc())
         return 0
 
     ctx = Context(
@@ -89,6 +188,9 @@ def main(argv=None) -> int:
         vmem_extra=args.vmem_extra,
         jaxpr_extra=args.jaxpr_extra,
         purity_root=args.purity_root,
+        grid_extra=args.grid_extra,
+        numerics_extra=args.numerics_extra,
+        hbm_extra=args.hbm_extra,
     )
 
     if args.vmem_table:
@@ -103,16 +205,35 @@ def main(argv=None) -> int:
         return 0
 
     findings = run_rules(ctx, families=families, names=names or None)
+    demoted = 0
+    if args.baseline:
+        try:
+            demoted = _apply_baseline(findings, args.baseline)
+        except (OSError, json.JSONDecodeError, KeyError) as exc:
+            print(f"error: bad baseline {args.baseline}: {exc}",
+                  file=sys.stderr)
+            return 2
     findings.sort(key=lambda f: (_SEV_ORDER.get(f.severity, 9), f.rule))
+
+    threshold = _SEV_ORDER[args.severity] if args.severity else None
+    shown = 0
     for f in findings:
+        if threshold is not None and \
+                _SEV_ORDER.get(f.severity, 9) > threshold:
+            continue
+        shown += 1
         print(f"[{f.severity.upper():5s}] {f.rule}: {f.obj} — {f.message}")
     n_err = sum(1 for f in findings if f.severity == "error")
     n_skip = sum(1 for f in findings if f.severity == "skip")
+    hidden = len(findings) - shown
+    tail = f" ({hidden} below --severity {args.severity})" if hidden else ""
+    base = f", {demoted} baselined" if demoted else ""
     print(f"\n{len(findings)} finding(s): {n_err} error(s), "
-          f"{n_skip} skipped rule(s)")
+          f"{n_skip} skipped rule(s){base}{tail}")
 
     if args.json_out:
-        doc = findings_to_json(findings, rules=args.rules)
+        doc = findings_to_json(findings, rules=args.rules,
+                               baselined=demoted)
         with open(args.json_out, "w", encoding="utf-8") as fh:
             fh.write(doc + "\n")
         print(f"wrote {args.json_out}")

@@ -148,12 +148,14 @@ def _step_fixture(ctx: Context):
     from repro.core.policy import DENSE
     from repro.serve.continuous import (ContinuousConfig,
                                         ContinuousServingEngine)
-    from repro.serve.paged import init_paged_cache, max_blocks_per_slot
+    from repro.serve.paged import (device_pool_rows, init_paged_cache,
+                                   max_blocks_per_slot)
 
     cfg, model, params = ctx.smoke_model()
     slots, bs, max_seq = 2, 8, 64
     mb = max_blocks_per_slot(max_seq, bs)
     nb = slots * mb
+    rows = device_pool_rows(nb)   # +1 sentinel row on device leaves
     pol = DENSE.with_(use_pallas_kernels=True)
     eng = ContinuousServingEngine(model, pol, ContinuousConfig(
         max_seq=max_seq, num_slots=slots, chunk_size=8, block_size=bs),
@@ -163,8 +165,8 @@ def _step_fixture(ctx: Context):
     tab[0, :3], tab[1, :3] = [1, 2, 3], [4, 5, 6]
     cache["block_table"] = jnp.asarray(tab)
     cache["pos"] = jnp.asarray([10, 7], jnp.int32)
-    pool_shapes = {(nb, bs, cfg.n_kv_heads, cfg.head_dim),
-                   (nb * bs, cfg.n_kv_heads, cfg.head_dim)}
+    pool_shapes = {(rows, bs, cfg.n_kv_heads, cfg.head_dim),
+                   (rows * bs, cfg.n_kv_heads, cfg.head_dim)}
     args = (params, cache, jnp.asarray(0, jnp.int32),
             jnp.zeros((1, 8), jnp.int32), jnp.asarray(8, jnp.int32),
             {}, jnp.zeros((slots,), jnp.int32),

@@ -41,6 +41,8 @@ __all__ = [
     "estimate_jaxpr",
     "estimate_call",
     "kernel_zoo_entries",
+    "GridZooEntry",
+    "grid_zoo_entries",
     "footprint_table",
 ]
 
@@ -231,6 +233,155 @@ def _zoo(cfg, chunk, decode_slots, max_seq, block_size):
         lambda kn_, vn_, kp_, vp_, t_, p_, c_: paged_kv_scatter_pallas(
             kn_, vn_, kp_, vp_, t_, p_, c_, interpret=True),
         knew, knew, pool, pool, tab, vec, vec)))
+    return entries
+
+
+@dataclasses.dataclass
+class GridZooEntry:
+    """One CONCRETE small-geometry kernel call for the grid-semantics
+    (``races``) and HBM cost-model (``hbm``) rules.
+
+    Unlike the abstract ``kernel_zoo_entries`` sweep (ShapeDtypeStructs,
+    full-config dims), these entries carry real operand values — the
+    scalar-prefetched block tables / positions / lengths must be concrete
+    so every BlockSpec index map can be *evaluated* over the enumerated
+    grid.  Geometry is chosen so every grid axis has ≥ 2 steps (tiled
+    matmuls get I, J, K ≥ 2): degenerate single-step grids would make the
+    revisit/elision checks and the closed-form byte model vacuously agree.
+
+    ``dims`` feeds ``repro.kernels.COST_MODEL[name]["bytes"]`` — logical
+    quantities (t, d, n_out, tile sizes, tables) the documented formulas
+    are written in.  Entry names MUST mirror ``kernel_zoo_entries`` —
+    the races rule derives its required coverage set from the vmem zoo,
+    so a kernel added there without a grid-zoo twin is an error finding,
+    not a silent skip.
+    """
+    name: str
+    fn: Any
+    args: Tuple[Any, ...]
+    dims: Dict[str, Any]
+
+
+def grid_zoo_entries(cfg) -> List[GridZooEntry]:
+    """Concrete-operand kernel calls over ``cfg``'s dims at a small,
+    non-degenerate geometry (see :class:`GridZooEntry`).  Paged entries
+    follow the serving pool convention: device pools carry the trailing
+    sentinel row (``serve/paged.device_pool_rows``) and block tables
+    never reference it."""
+    import functools
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.kernels.paged_attention import (paged_attention_pallas,
+                                               paged_kv_scatter_pallas)
+    from repro.serve.paged import device_pool_rows
+
+    d = cfg.d_model
+    n_out = max(cfg.d_ff, cfg.q_dim, cfg.moe_d_ff or 0)
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    n, m = _nm_for(d)
+
+    t, bt = 32, 16                                    # I = 2
+    bo = n_out // 2 if n_out % 2 == 0 else n_out      # J = 2
+    bk = d // 2 if d % 2 == 0 and (d // 2) % m == 0 else d   # K = 2
+    bk8 = d // 2 if d % 2 == 0 else d                 # no %m constraint
+
+    x = jnp.zeros((t, d), jnp.float32)
+    xd = jnp.zeros((2, d), jnp.float32)
+    w = jnp.zeros((d, n_out), jnp.float32)
+    wq = jnp.zeros((d, n_out), jnp.int8)
+    vec_d = jnp.ones((d,), jnp.float32)
+    vec_o = jnp.ones((n_out,), jnp.float32)
+    act = jnp.float32(1.0)
+
+    mm = dict(t=t, d=d, n_out=n_out, bt=bt, bo=bo, bk=bk)
+    entries = [
+        GridZooEntry(
+            "nm_prune",
+            lambda x_, s_: ops.nm_prune(x_, s_, n, m, block_t=bt,
+                                        block_d=bk),
+            (x, vec_d), dict(t=t, d=d, bt=bt, bd=bk)),
+        GridZooEntry(
+            "nm_prune_matmul",
+            lambda x_, w_, s_, b_: ops.nm_prune_matmul(
+                x_, w_, s_, n, m, bias=b_, block_t=bt, block_o=bo,
+                block_k=bk),
+            (x, w, vec_d, vec_o), dict(mm)),
+        GridZooEntry(
+            "nm_spmm",
+            lambda x_, w_, s_: ops.nm_spmm(x_, w_, s_, n, m, tile=bt,
+                                           block_o=bo, block_k=bk),
+            (x, w, vec_d), dict(mm)),
+        GridZooEntry(
+            "osparse_matmul",
+            lambda x_, wq_, sm_, am_, ws_, b_: ops.osparse_matmul(
+                x_, wq_, sm_, am_, ws_, n, m, bias=b_, per_token=True,
+                block_t=bt, block_o=bo, block_k=bk),
+            (x, wq, vec_d, vec_d, vec_o, vec_o), dict(mm)),
+        GridZooEntry(
+            "osparse_w8a8_decode",
+            lambda x_, wq_, sm_, ws_, a_, b_: ops.osparse_matmul(
+                x_, wq_, sm_, None, ws_, n, m, act_scale=a_, bias=b_,
+                prune=False, block_t=1, block_o=bo, block_k=bk),
+            (xd, wq, vec_d, vec_o, act, vec_o),
+            dict(mm, t=2, bt=1)),
+        GridZooEntry(
+            "w8a8_matmul",
+            lambda xq_, wq_, a_, ws_: ops.w8a8_matmul(
+                xq_, wq_, a_, ws_, block_t=bt, block_o=bo, block_k=bk8),
+            (jnp.zeros((t, d), jnp.int8), wq, act, vec_o),
+            dict(mm, bk=bk8)),
+    ]
+
+    t_attn, ba = 64, 16
+    q4 = jnp.zeros((1, hq, t_attn, hd), jnp.float32)
+    kv4 = jnp.zeros((1, hkv, t_attn, hd), jnp.float32)
+    entries.append(GridZooEntry(
+        "flash_attention",
+        functools.partial(flash_attention_pallas, causal=True, block_q=ba,
+                          block_k=ba, interpret=True),
+        (q4, kv4, kv4),
+        dict(b=1, h=hq, hkv=hkv, t=t_attn, s_kv=t_attn, bq=ba, bk=ba,
+             hd=hd)))
+
+    # paged pool: 2 rows, 16 allocatable blocks + the trailing sentinel
+    # row (never in any table).  Row 0 is a from-zero prefill (kv_len =
+    # its chunk); row 1 sits mid-sequence at pos 12/16.
+    bs, mb, nb = 8, 8, 16
+    rows = device_pool_rows(nb)
+    pool = jnp.zeros((rows, bs, hkv, hd), jnp.float32)
+    atab = np.full((2, mb), -1, np.int32)
+    atab[0, :4] = [1, 2, 3, 4]
+    atab[1, :6] = [5, 6, 7, 8, 9, 10]
+    tq = 32
+    qoff = np.asarray([0, 16], np.int32)
+    kvl = np.asarray([tq, 16 + tq], np.int32)
+    entries.append(GridZooEntry(
+        "paged_attention",
+        functools.partial(paged_attention_pallas, causal=True, block_q=16,
+                          interpret=True),
+        (jnp.zeros((2, tq, hq, hd), jnp.float32), pool, pool,
+         jnp.asarray(atab), jnp.asarray(qoff), jnp.asarray(kvl)),
+        dict(b=2, h=hq, hkv=hkv, t=tq, bq=16, bs=bs, mb=mb, rows=rows,
+             hd=hd, tab=atab, qoff=qoff, kvl=kvl)))
+
+    stab = np.full((2, mb), -1, np.int32)
+    stab[0, :2] = [1, 2]
+    stab[1, 1:4] = [5, 6, 7]
+    ts = 16
+    pos = np.asarray([0, 12], np.int32)
+    cl = np.asarray([ts, ts], np.int32)
+    knew = jnp.zeros((2, ts, hkv, hd), jnp.float32)
+    entries.append(GridZooEntry(
+        "paged_kv_scatter",
+        functools.partial(paged_kv_scatter_pallas, interpret=True),
+        (knew, knew, pool, pool, jnp.asarray(stab), jnp.asarray(pos),
+         jnp.asarray(cl)),
+        dict(b=2, t=ts, bs=bs, mb=mb, rows=rows, hkv=hkv, hd=hd, tab=stab,
+             pos=pos, cl=cl)))
     return entries
 
 

@@ -46,47 +46,41 @@ Dispatch order for model projections (``layers.linear.sparse_linear``):
   3. The pure-jnp implementations in ``repro.core`` remain the bit-exact
      oracles (``kernels.ref`` wraps them per kernel for the test sweeps).
 
-One-pass HBM cost model (per projection call, activation bytes B = T·D·s;
-"pass" = one full traversal of X *beyond* the tiled GEMM's own block
-streaming, which is identical for the fused and unfused forms):
+HBM cost model — ``COST_MODEL`` below is the machine-readable contract:
+exact bytes moved per kernel call under Mosaic's pipelined fetch/write
+semantics (a block is fetched at the start of each maximal RUN of grid
+steps mapping to it, written back once per output run — consecutive
+equal block indices elide the refetch/write-back).  The ``hbm`` analyzer
+family enumerates every kernel's real grid + index maps and fails CI
+when the measured bytes diverge >10% from these formulas, so the table
+below cannot rot.  Versus the jnp oracles: the fused projections spend
+ZERO extra X passes (the mask/quantized copies live in registers; the
+jnp chains write + re-read them), the gather oracle round-trips the full
+(B, mb·bs, Hkv, hd) logical view per call while ``paged_attention``
+streams O(kv_len) rows, and the flat-index scatter round-trips the whole
+pool per leaf while ``paged_kv_scatter`` touches only the blocks a chunk
+overlaps.
 
-  nm_prune_matmul   0 extra passes — the mask lives in registers; the jnp
-                    chain spends 2 (write the masked copy, re-read it).
-  osparse_matmul    static scale: 0 extra passes; per-token scale: 1 (the
-                    absmax sweep, run once per token block) — and ZERO
-                    intermediate writes either way, vs the jnp chain's ~4
-                    reads + 3 writes (smoothed, masked, quantized copies).
-  nm_spmm           0 extra passes at (n/m) of the dense MXU FLOPs; VMEM
-                    residency is per k-block (bt·bk + bk·bo), so reduction
-                    depth D is unbounded (16k+ tiles fine).
+--- HBM bytes per call (generated from COST_MODEL; do not edit) ---
+  flash_attention      s*(2*B*H*T*hd + 2*B*H*(T/bq)*S*hd)
+  nm_prune             s*(2*T*D + I*D)
+  nm_prune_matmul      s*(J*T*D + I*D*N + I*J*D + I*N + T*N)
+  nm_spmm              s*(J*T*D + I*D*N + I*J*D + T*N)
+  osparse_matmul       s*(2*J*T*D + 4*I*J*D + 2*I*N + T*N) + 2*I*D*N
+  osparse_w8a8_decode  s*(J*T*D + 2*I*J*D + 2*I*N + T*N + 1) + I*D*N
+  paged_attention      s*(2*B*H*T*hd + runs(kv walk)*2*bs*hd)
+  paged_kv_scatter     s*(2*B*T*r + runs(pool walk)*4*bs*r)
+  w8a8_matmul          J*T*D + I*D*N + s*(I*N + 1 + T*N)
+--- end generated table ---
 
-Paged-attention HBM cost model (per serving call over a pool of
-``num_blocks`` blocks of ``bs`` rows, table width ``mb``, per-row valid
-length ``kv_len``; row bytes r = Hkv·hd·s):
-
-  gather oracle     materializes the (B, mb·bs, Hkv, hd) logical view in
-                    HBM — B·mb·bs·r written then re-read by the attention
-                    scan (2 extra logical-view passes per layer per call),
-                    and the traffic is O(mb·bs) regardless of how little
-                    of the table is allocated.  For decode (T = 1) this is
-                    the dominant term of the whole step.
-  paged_attention   0 extra passes — each allocated block streams HBM→VMEM
-                    exactly once per (head, q-tile); traffic is
-                    O(ceil(kv_len/bs)·bs) ≈ O(kv_len) per row, so decode
-                    attention reads O(pos) rows instead of O(mb·bs), and
-                    skipped blocks (unallocated tail, causal future,
-                    off-window) never issue their DMA-consuming matmuls.
-  flat-idx scatter  the jnp KV write builds (B·T,) flat indices and
-                    scatters through the POOL-SIZED flat view — XLA
-                    round-trips the full pool value per chunk/decode call
-                    (read + write of num_blocks·bs·r per K and V leaf),
-                    independent of how few rows change.
-  paged_kv_scatter  touches only the ≤ ceil(T/bs)+1 logical blocks a
-                    chunk overlaps, per batch row: each visible block is
-                    one bs·r read + write through the aliased output;
-                    invisible grid steps elide even the refetch (their
-                    index map parks on an already-resident block and the
-                    kernel writes nothing).
+Symbols: T tokens, D in-features, N out-features, s dtype bytes (f32:
+4); grid extents I = T/bt, J = N/bo, K = D/bk (K-refetch of X/W blocks
+is why J·T·D and I·D·N appear, not T·D and D·N); attention B, H, hd,
+query tile bq, KV length S; paged r = Hkv·hd.  ``runs(·)`` counts
+maximal constant runs of the scalar-prefetched block walk — the paged
+formulas replay the documented table/visibility contract over the real
+block table (invisible steps park on the row-0/sentinel block, so
+consecutive skips fetch nothing).
 
 Dispatch for the paged pool (``models/attention.paged_attention`` reads,
 ``models/attention.paged_kv_update`` writes) runs the same ladder as the
@@ -142,4 +136,184 @@ __all__ = [
     "flash_attention_pallas",
     "paged_attention_pallas",
     "paged_kv_scatter_pallas",
+    "COST_MODEL",
+    "cost_model_doc",
 ]
+
+
+# --------------------------------------------------------------------------
+# COST_MODEL: closed-form HBM bytes per kernel call.
+#
+# Each entry maps a kernel-zoo name to {"formula": <doc string — MUST match
+# the generated table in the module docstring>, "bytes": fn(dims) -> int}.
+# ``dims`` is the geometry dict a ``grid_zoo_entries`` entry carries
+# (tokens/features/block sizes, and for the paged kernels the concrete
+# block table / positions / lengths).  The formulas model Mosaic's
+# pipelined traffic: one fetch per maximal RUN of grid steps mapping an
+# operand to the same block (row-major grid order, last axis innermost),
+# one write-back per output run.  ``repro.analysis.hbm`` measures the same
+# quantity from the kernels' REAL BlockSpec index maps and fails on >10%
+# divergence — these formulas are the independent re-derivation from the
+# documented contract, not a transcription of the measurement.
+#
+# Pure Python on purpose (no jax/numpy): the model is consultable from
+# host-only contexts and the purity rules keep this module import-light.
+
+def _run_count(seq) -> int:
+    """Maximal constant runs in a sequence — the number of block
+    fetches Mosaic's refetch elision leaves in a grid walk."""
+    runs, prev = 0, object()
+    for item in seq:
+        if item != prev:
+            runs, prev = runs + 1, item
+    return runs
+
+
+def _mm_dims(d):
+    s = d.get("s", 4)
+    t, dd, n = d["t"], d["d"], d["n_out"]
+    i, j = t // d["bt"], n // d["bo"]
+    return s, t, dd, n, i, j
+
+
+def _nm_prune_bytes(d):
+    s = d.get("s", 4)
+    i = d["t"] // d["bt"]
+    return s * (2 * d["t"] * d["d"] + i * d["d"])
+
+
+def _nm_prune_matmul_bytes(d):
+    s, t, dd, n, i, j = _mm_dims(d)
+    return s * (j * t * dd + i * dd * n + i * j * dd + i * n + t * n)
+
+
+def _nm_spmm_bytes(d):
+    s, t, dd, n, i, j = _mm_dims(d)
+    return s * (j * t * dd + i * dd * n + i * j * dd + t * n)
+
+
+def _osparse_matmul_bytes(d):
+    # per-token scale: the k axis runs twice (absmax pass + GEMM pass),
+    # doubling X/weight/channel-vector traffic; wq is int8 (1 byte)
+    s, t, dd, n, i, j = _mm_dims(d)
+    return (s * (2 * j * t * dd + 4 * i * j * dd + 2 * i * n + t * n)
+            + 2 * i * dd * n)
+
+
+def _osparse_w8a8_decode_bytes(d):
+    # static scale (prune=False decode form): single k pass, scalar
+    # act-scale is one 4-byte fetch for the whole grid.  The amber
+    # channel vector streams even when unused (the kernel's operand list
+    # is static — a ones placeholder rides next to smooth), hence 2·I·J·D
+    s, t, dd, n, i, j = _mm_dims(d)
+    return (s * (j * t * dd + 2 * i * j * dd + 2 * i * n + t * n + 1)
+            + i * dd * n)
+
+
+def _w8a8_matmul_bytes(d):
+    # xq/wq int8; w_scale f32 per output run; x_scale one scalar fetch
+    s, t, dd, n, i, j = _mm_dims(d)
+    return j * t * dd + i * dd * n + s * (i * n + 1 + t * n)
+
+
+def _flash_attention_bytes(d):
+    # q/out resident across the KV axis (1 run per (b,h,q-tile)); k/v
+    # blocks are fetched every step — causal masking skips the COMPUTE
+    # of future blocks, not their DMA (the index map is unconditional)
+    s = d.get("s", 4)
+    b, h, t, skv, bq, hd = d["b"], d["h"], d["t"], d["s_kv"], d["bq"], d["hd"]
+    return s * (2 * b * h * t * hd + 2 * b * h * (t // bq) * skv * hd)
+
+
+def _paged_attention_bytes(d):
+    # replay the documented block walk: grid (B, H, T/bq, mb), mb
+    # innermost; invisible steps (unallocated / beyond kv_len / causally
+    # future) remap to the row's FIRST block so consecutive skips elide
+    # their fetch.  GQA: query head h reads KV head h // (H/Hkv).
+    s = d.get("s", 4)
+    b, h, hkv, t = d["b"], d["h"], d["hkv"], d["t"]
+    bq, bs, mb, hd = d["bq"], d["bs"], d["mb"], d["hd"]
+    tab, qoff, kvl = d["tab"], d["qoff"], d["kvl"]
+    g = h // hkv
+    walk = []
+    for bi in range(b):
+        for hh in range(h):
+            for qi in range(t // bq):
+                for ki in range(mb):
+                    pb = int(tab[bi][ki])
+                    k_lo = ki * bs
+                    q_lo = int(qoff[bi]) + qi * bq
+                    vis = (pb >= 0 and k_lo < int(kvl[bi])
+                           and k_lo <= q_lo + bq - 1)       # causal
+                    if not vis:
+                        pb = int(tab[bi][0])
+                    walk.append((max(pb, 0), hh // g))
+    q_out = 2 * b * h * t * hd * s
+    return q_out + 2 * _run_count(walk) * bs * hd * s       # k and v
+
+
+def _paged_kv_scatter_bytes(d):
+    # grid (B, n_lb) over the ≤ ceil(T/bs)+1 logical blocks a chunk can
+    # overlap; visible steps resolve table[pos//bs + ci], invisible ones
+    # park on the pool's reserved SENTINEL row (rows-1).  Each pool run
+    # costs a fetch AND an aliased write-back, for K and V (×4); k_new /
+    # v_new are resident per batch row (×2 fetches of T rows).
+    s = d.get("s", 4)
+    b, t, bs, mb, rows = d["b"], d["t"], d["bs"], d["mb"], d["rows"]
+    r = d["hkv"] * d["hd"]
+    tab, pos, cl = d["tab"], d["pos"], d["cl"]
+    n_lb = min((t - 1) // bs + 2, t)
+    walk = []
+    for bi in range(b):
+        for ci in range(n_lb):
+            lb = int(pos[bi]) // bs + ci
+            pb = int(tab[bi][min(max(lb, 0), mb - 1)])
+            lo = lb * bs
+            vis = (lb < mb and pb >= 0 and lo < int(pos[bi]) + int(cl[bi])
+                   and lo + bs > int(pos[bi]))
+            walk.append(max(pb, 0) if vis else rows - 1)
+    return s * (2 * b * t * r + 4 * _run_count(walk) * bs * r)
+
+
+COST_MODEL = {
+    "nm_prune": {
+        "formula": "s*(2*T*D + I*D)",
+        "bytes": _nm_prune_bytes},
+    "nm_prune_matmul": {
+        "formula": "s*(J*T*D + I*D*N + I*J*D + I*N + T*N)",
+        "bytes": _nm_prune_matmul_bytes},
+    "nm_spmm": {
+        "formula": "s*(J*T*D + I*D*N + I*J*D + T*N)",
+        "bytes": _nm_spmm_bytes},
+    "osparse_matmul": {
+        "formula": "s*(2*J*T*D + 4*I*J*D + 2*I*N + T*N) + 2*I*D*N",
+        "bytes": _osparse_matmul_bytes},
+    "osparse_w8a8_decode": {
+        "formula": "s*(J*T*D + 2*I*J*D + 2*I*N + T*N + 1) + I*D*N",
+        "bytes": _osparse_w8a8_decode_bytes},
+    "w8a8_matmul": {
+        "formula": "J*T*D + I*D*N + s*(I*N + 1 + T*N)",
+        "bytes": _w8a8_matmul_bytes},
+    "flash_attention": {
+        "formula": "s*(2*B*H*T*hd + 2*B*H*(T/bq)*S*hd)",
+        "bytes": _flash_attention_bytes},
+    "paged_attention": {
+        "formula": "s*(2*B*H*T*hd + runs(kv walk)*2*bs*hd)",
+        "bytes": _paged_attention_bytes},
+    "paged_kv_scatter": {
+        "formula": "s*(2*B*T*r + runs(pool walk)*4*bs*r)",
+        "bytes": _paged_kv_scatter_bytes},
+}
+
+
+def cost_model_doc() -> str:
+    """The generated docstring table, rendered from :data:`COST_MODEL` —
+    ``repro.analysis.hbm`` fails when the module docstring's marker
+    section drifts from this (regenerate via
+    ``python -m repro.analysis --hbm-table``)."""
+    lines = ["--- HBM bytes per call (generated from COST_MODEL; "
+             "do not edit) ---"]
+    for name in sorted(COST_MODEL):
+        lines.append(f"  {name:<20} {COST_MODEL[name]['formula']}")
+    lines.append("--- end generated table ---")
+    return "\n".join(lines)

@@ -269,11 +269,15 @@ def w8a8_matmul(
     wq: jax.Array,
     x_scale: jax.Array,
     w_scale: jax.Array,
+    block_t: int = 256,
+    block_o: int = 256,
+    block_k: int = 512,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     interpret = default_interpret() if interpret is None else interpret
     y = tp_mod.column_parallel(
-        lambda wq_, ws_: w8a8_matmul(xq, wq_, x_scale, ws_,
+        lambda wq_, ws_: w8a8_matmul(xq, wq_, x_scale, ws_, block_t=block_t,
+                                     block_o=block_o, block_k=block_k,
                                      interpret=interpret),
         (wq, w_scale))
     if y is not None:
@@ -281,9 +285,9 @@ def w8a8_matmul(
     xf, lead = _flatten(xq)
     t, d = xf.shape
     n_out = wq.shape[-1]
-    bt, tp = _block_and_pad(t, 256)
-    bo, op = _block_and_pad(n_out, 256)
-    bk, dp = _block_and_pad(d, 512)
+    bt, tp = _block_and_pad(t, block_t)
+    bo, op = _block_and_pad(n_out, block_o)
+    bk, dp = _block_and_pad(d, block_k)
     xf = _pad_to(_pad_to(xf, 0, tp), 1, dp)
     wq = _pad_to(_pad_to(wq, 0, dp), 1, op)
     w_scale = _pad_to(w_scale, 0, op)

@@ -281,6 +281,13 @@ def paged_kv_scatter_pallas(
     Rows whose target block is unallocated (-1) or out of table range are
     dropped, matching the jnp oracle's ``mode="drop"`` fence.
 
+    Sentinel contract: the LAST pool row (``num_blocks - 1`` of the array,
+    i.e. ``serve/paged.device_pool_rows``'s reserved trailing row) is
+    where invisible grid steps park their aliased fetch/write-back.  Its
+    content is never read for merging and the write-back is the identity,
+    but callers must not store live KV there — ``init_paged_cache`` sizes
+    device pools with the extra row so allocator block ids never reach it.
+
     Chunks whose resident tile would blow the static VMEM budget are
     split into sub-chunk calls of at most ``ts`` rows (static Python
     loop, still zero pool-shaped ops outside ``pallas_call``): sub-call
@@ -322,11 +329,18 @@ def _scatter_call(k_new, v_new, k_pool, v_pool, block_table, pos,
     def pool_index(bi, ci, tab_ref, pos_ref, len_ref):
         _, pb, vis = _scatter_visible(tab_ref, pos_ref, len_ref, bi, ci,
                                       bs=bs, mb=mb)
-        # invisible steps remap to the row's first block (clipped for
-        # empty rows): consecutive skipped steps keep the index unchanged
-        # so refetch elision drops their DMA, and the identity write-back
-        # is a no-op wherever it lands
-        pb = jnp.where(vis, pb, tab_ref[bi, 0])
+        # invisible steps park on the SENTINEL block — the pool's reserved
+        # trailing row (``serve/paged.device_pool_rows``), never handed out
+        # by the allocator and never in any block table.  Consecutive
+        # skipped steps keep the index unchanged so refetch elision drops
+        # their DMA; the identity write-back lands on a block no other
+        # grid step fetches for content.  Parking on a *live* block (the
+        # old ``tab[bi, 0]`` remap) is a pipelining RAW hazard: a chunk
+        # whose trailing invisible step remapped to its own first block
+        # would refetch that block while the earlier step's aliased
+        # write-back may still be in flight — surfaced by the ``races``
+        # analyzer family (grid_eval checks aliased refetch-after-write).
+        pb = jnp.where(vis, pb, nb - 1)
         return (jnp.maximum(pb, 0), 0, 0, 0)
 
     def new_index(bi, ci, *_):

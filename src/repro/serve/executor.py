@@ -395,3 +395,11 @@ class Executor:
         check the kernels-off program as well (and prove the kernels-on
         pins aren't vacuously true)."""
         return (self._step_oracle_raw if oracle else self._step_raw)[bucket]
+
+    def step_programs(self, oracle: bool = False):
+        """Sweep hook: yield ``(bucket, name, program)`` for EVERY
+        :data:`STEP_BUCKETS` row — the analyzer iterates this (rather
+        than hand-listing buckets) so a new bucket is in the checked
+        contract the moment it exists."""
+        for bucket, name in STEP_BUCKETS.items():
+            yield bucket, name, self.step_program(bucket, oracle=oracle)

@@ -56,7 +56,25 @@ from repro.serve.faults import fire as _fire_fault
 # helper, init_paged_cache, imports jax lazily.
 
 __all__ = ["BlockPool", "chain_block_hashes", "chain_block_keys",
-           "init_paged_cache", "max_blocks_per_slot"]
+           "device_pool_rows", "init_paged_cache", "max_blocks_per_slot"]
+
+
+# Device pool leaves carry ONE reserved row past the allocator's id space:
+# the trailing SENTINEL block.  The paged KV scatter kernel's aliased
+# index map parks invisible grid steps there (a fixed, never-allocated
+# physical block), so a parked write-back can never race a block some
+# other grid step legitimately wrote — see
+# ``kernels/paged_attention._scatter_call`` and the ``races`` analyzer
+# family.  BlockPool itself never hands out the sentinel id; only the
+# device-side leaf shape knows about it.
+SENTINEL_POOL_ROWS = 1
+
+
+def device_pool_rows(num_blocks: int) -> int:
+    """Rows of a device pool leaf for an allocator of ``num_blocks``
+    physical blocks: the allocatable blocks plus the trailing sentinel
+    row reserved for the scatter kernel's parked grid steps."""
+    return num_blocks + SENTINEL_POOL_ROWS
 
 _HASH_SEED = 0x9E3779B9
 
@@ -438,9 +456,11 @@ def init_paged_cache(model, num_slots: int, max_seq: int, block_size: int,
 
     ``spec`` is the bool pytree from ``model.paged_kv_spec()``: leaves
     marked True swap their ``(..., num_slots, max_seq, ...)`` axes for
-    pooled ``(..., num_blocks, block_size, ...)``; everything else keeps
-    the slot axis.  Adds the per-slot ``pos`` vector and the ``-1``-filled
-    ``block_table``.
+    pooled ``(..., device_pool_rows(num_blocks), block_size, ...)`` —
+    ``num_blocks`` allocatable blocks plus the trailing sentinel row the
+    scatter kernel parks invisible grid steps on (never referenced by any
+    block table); everything else keeps the slot axis.  Adds the per-slot
+    ``pos`` vector and the ``-1``-filled ``block_table``.
     """
     # shapes only — materializing the dense slab just to discard its paged
     # leaves would transiently cost dense + pool memory, exactly the
@@ -462,7 +482,8 @@ def init_paged_cache(model, num_slots: int, max_seq: int, block_size: int,
 
         def pool_leaf(a, paged, ax=ax):
             if paged:
-                shape = (a.shape[:ax] + (num_blocks, block_size)
+                shape = (a.shape[:ax]
+                         + (device_pool_rows(num_blocks), block_size)
                          + a.shape[ax + 2:])
                 return jnp.zeros(shape, a.dtype)
             return jnp.zeros(a.shape, a.dtype)

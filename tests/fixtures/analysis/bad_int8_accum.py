@@ -1,0 +1,34 @@
+"""Seeded-bad fixture: int8×int8 GEMM accumulating in int8.
+
+No ``preferred_element_type`` on the dot_general → the MXU accumulates
+in the operand dtype and wraps at ±127 on real hardware; CPU interpret
+mode widens internally and hides it.  The ``numerics`` lint must flag
+the body with exactly one ``int8-accum`` finding.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _body(x_ref, w_ref, o_ref):
+    # BUG (seeded): accumulates in int8 — no preferred_element_type
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())))
+
+
+def int8_matmul(x, w):
+    return pl.pallas_call(
+        _body,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((8, 16), lambda i: (0, 0)),
+                  pl.BlockSpec((16, 8), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((8, 8), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 8), jnp.int8),
+        interpret=True,
+    )(x, w)
+
+
+NUMERICS_ENTRIES = [
+    ("bad_int8_accum", int8_matmul,
+     (jnp.zeros((8, 16), jnp.int8), jnp.zeros((16, 8), jnp.int8))),
+]

@@ -1,0 +1,33 @@
+"""Seeded-bad fixture: output block revisited discontiguously.
+
+Grid (4,) writes output blocks [0, 1, 0, 1]: Mosaic writes a block back
+when the index CHANGES, so block 0's step-0 contribution is flushed
+before step 2 revisits it — the revisit starts from a stale VMEM copy
+(write-after-write).  Interpret mode reuses one buffer and hides it.
+The ``races`` checker must flag the output with exactly one
+``out-revisit`` finding.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _body(x_ref, o_ref):
+    o_ref[...] = o_ref[...] + x_ref[...]
+
+
+def discontiguous_accumulate(x):
+    return pl.pallas_call(
+        _body,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((4, 8), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((4, 8), lambda i: (i % 2, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 8), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+GRID_ENTRIES = [
+    ("race_discontiguous", discontiguous_accumulate,
+     (jnp.zeros((16, 8), jnp.float32),)),
+]

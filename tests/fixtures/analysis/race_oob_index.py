@@ -1,0 +1,30 @@
+"""Seeded-bad fixture: index map computes a block index past the array.
+
+The input has 2 row-blocks but the map yields ``i * 2`` → step 1 asks
+for block 2.  Pallas clamps out-of-bounds indices silently, so at
+runtime this reads the WRONG block instead of failing — the ``races``
+checker must flag it with exactly one ``oob`` finding.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _body(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + 1.0
+
+
+def oob_read(x):
+    return pl.pallas_call(
+        _body,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i * 2, 0))],
+        out_specs=pl.BlockSpec((8, 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((16, 8), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+GRID_ENTRIES = [
+    ("race_oob_index", oob_read, (jnp.zeros((16, 8), jnp.float32),)),
+]

@@ -1,0 +1,33 @@
+"""Seeded-bad fixture: aliased in-place update whose index map revisits
+a block AFTER the pipeline moved off it.
+
+Grid (3,) maps steps [0, 1, 0]: step 2 re-fetches block 0, which step 0
+already wrote through the alias — a refetch-after-write race under
+Mosaic pipelining (interpret mode hides it).  The ``races`` checker must
+flag the aliased pair with exactly one ``aliased-raw`` finding.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _body(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def racing_update(x):
+    return pl.pallas_call(
+        _body,
+        grid=(3,),
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i % 2, 0))],
+        out_specs=pl.BlockSpec((8, 8), lambda i: (i % 2, 0)),
+        out_shape=jax.ShapeDtypeStruct((16, 8), jnp.float32),
+        input_output_aliases={0: 0},
+        interpret=True,
+    )(x)
+
+
+GRID_ENTRIES = [
+    ("race_write_write", racing_update,
+     (jnp.zeros((16, 8), jnp.float32),)),
+]

@@ -1,0 +1,36 @@
+"""Seeded-bad fixture: a COST_MODEL entry that drifted from its kernel.
+
+The kernel moves ``2 * 16 * 8 * 4`` bytes (one fetch + one write of a
+(16, 8) f32 array in a single-step grid); the documented formula claims
+10x that.  The ``hbm`` cost-model check must flag it with exactly one
+divergence finding.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _body(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def tiny_scale(x):
+    return pl.pallas_call(
+        _body,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((16, 8), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((16, 8), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((16, 8), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _stale_bytes(dims):
+    # BUG (seeded): stale formula — 10x the kernel's actual traffic
+    return 10 * 2 * dims["t"] * dims["d"] * 4
+
+
+COST_ENTRIES = [
+    ("stale_cost_model", tiny_scale, (jnp.zeros((16, 8), jnp.float32),),
+     _stale_bytes, {"t": 16, "d": 8}),
+]

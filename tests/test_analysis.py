@@ -40,6 +40,7 @@ def _errors(doc, rule):
 
 # ------------------------------------------------------------ CLI, seeded
 
+
 def test_cli_flags_oversized_kernel(tmp_path):
     """A kernel whose BlockSpec blows the per-core VMEM budget must fail
     the vmem.budget rule through the CLI."""
@@ -95,6 +96,7 @@ def test_cli_rejects_unknown_family(tmp_path):
 
 
 # ------------------------------------------------------- library pieces
+
 
 def test_vmem_estimator_flags_oversized_kernel():
     from repro.analysis.vmem import estimate_call
@@ -178,6 +180,175 @@ def test_findings_json_schema():
     assert doc["failed"] is True
     assert doc["summary"] == {"error": 1, "info": 1}
     assert doc["findings"][0]["data"] == {"x": 1}
+
+
+# ------------------------------------------------- races/hbm/numerics
+
+
+@pytest.mark.parametrize("fixture,kind", [
+    ("race_write_write", "aliased-raw"),
+    ("race_oob_index", "oob"),
+    ("race_discontiguous", "out-revisit"),
+])
+def test_cli_flags_seeded_grid_race(tmp_path, fixture, kind):
+    """Each seeded racy grid yields EXACTLY ONE structured finding of
+    its hazard class through the real CLI."""
+    proc, doc = _run_cli(
+        "--rules", "races.extra-entries",
+        "--grid-extra", os.path.join(_FIX, fixture + ".py"),
+        tmp_path=tmp_path)
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    hits = _errors(doc, "races.extra-entries")
+    assert len(hits) == 1, doc["findings"]
+    assert hits[0]["obj"] == fixture
+    assert hits[0]["data"]["kind"] == kind
+
+
+def test_cli_flags_int8_accumulator(tmp_path):
+    """int8×int8 dot_general without preferred_element_type must fail
+    the numerics lint with exactly one finding."""
+    proc, doc = _run_cli(
+        "--rules", "numerics.extra-entries",
+        "--numerics-extra", os.path.join(_FIX, "bad_int8_accum.py"),
+        tmp_path=tmp_path)
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    hits = _errors(doc, "numerics.extra-entries")
+    assert len(hits) == 1, doc["findings"]
+    assert hits[0]["data"]["kind"] == "int8-accum"
+
+
+def test_cli_flags_stale_cost_model(tmp_path):
+    """A cost formula 10x off its kernel's measured bytes must fail the
+    hbm divergence check with exactly one finding."""
+    proc, doc = _run_cli(
+        "--rules", "hbm.extra-entries",
+        "--hbm-extra", os.path.join(_FIX, "stale_cost_model.py"),
+        tmp_path=tmp_path)
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    hits = _errors(doc, "hbm.extra-entries")
+    assert len(hits) == 1, doc["findings"]
+    assert hits[0]["obj"] == "stale_cost_model"
+    assert hits[0]["data"]["divergence"] > 0.10
+
+
+def test_cli_baseline_demotes_known_error(tmp_path):
+    """A (rule, obj) suppression in the baseline turns the error into a
+    tracked warning: exit 0, finding kept with data.baselined."""
+    base = os.path.join(str(tmp_path), "baseline.json")
+    with open(base, "w") as fh:
+        json.dump({"suppressions": [
+            {"rule": "races.extra-entries", "obj": "race_oob_index",
+             "reason": "tracked for the test"}]}, fh)
+    proc, doc = _run_cli(
+        "--rules", "races.extra-entries",
+        "--grid-extra", os.path.join(_FIX, "race_oob_index.py"),
+        "--baseline", base, tmp_path=tmp_path)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert doc["failed"] is False
+    warns = [f for f in doc["findings"]
+             if f["rule"] == "races.extra-entries"
+             and f["severity"] == "warning"]
+    assert len(warns) == 1 and warns[0]["data"]["baselined"] is True
+
+
+def test_cli_severity_filters_report_not_exit(tmp_path):
+    """--severity error hides info rows from the report; errors still
+    fail and a clean run still exits 0."""
+    proc, doc = _run_cli(
+        "--rules", "hbm.doc-sync", "--severity", "error",
+        tmp_path=tmp_path)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "[INFO " not in proc.stdout
+    assert doc["summary"].get("info", 0) >= 1  # JSON keeps everything
+
+
+def test_cli_rule_globs(tmp_path):
+    """fnmatch globs select rules; a glob matching nothing is a usage
+    error (a typo must not silently select zero checks)."""
+    proc, doc = _run_cli(
+        "--rules", "races.extra-*",
+        "--grid-extra", os.path.join(_FIX, "race_oob_index.py"),
+        tmp_path=tmp_path)
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert _errors(doc, "races.extra-entries")
+    proc, _ = _run_cli("--rules", "races.nomatch*", tmp_path=tmp_path)
+    assert proc.returncode == 2
+
+
+def test_races_coverage_spans_zoo_and_buckets():
+    """The races sweep enumerates every kernel-zoo entry point AND every
+    STEP_BUCKETS step program — the coverage counts are part of the
+    contract, so a silently skipped kernel breaks this test."""
+    from repro.analysis import Context
+    from repro.analysis.grid_eval import (rule_races_kernel_zoo,
+                                          rule_races_step_buckets)
+    from repro.analysis.vmem import kernel_zoo_entries
+    from repro.configs.base import get_smoke_config
+    from repro.serve.executor import STEP_BUCKETS
+
+    ctx = Context()
+    zoo = rule_races_kernel_zoo(ctx)
+    assert not [f for f in zoo if f.severity == "error"], \
+        [f.message for f in zoo]
+    (cov,) = [f for f in zoo if f.severity == "info"
+              and "coverage" in f.data]
+    required = {name for name, _ in
+                kernel_zoo_entries(get_smoke_config(ctx.arch))}
+    assert set(cov.data["coverage"]) == required
+    assert all(n >= 1 for n in cov.data["coverage"].values())
+
+    buckets = rule_races_step_buckets(ctx)
+    assert not [f for f in buckets if f.severity == "error"], \
+        [f.message for f in buckets]
+    (bcov,) = [f for f in buckets if f.severity == "info"]
+    assert set(bcov.data["coverage"]) == set(STEP_BUCKETS.values())
+    assert all(n >= 1 for n in bcov.data["coverage"].values())
+
+
+def test_grid_eval_sentinel_exemption():
+    """The scatter kernel's parked steps (sentinel row) are exempt; the
+    legacy park-on-live-block remap is precisely what gets flagged (the
+    race_write_write fixture covers the flagged side)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.analysis.grid_eval import (check_grid, eval_pallas_eqn,
+                                          trace_and_collect)
+    from repro.kernels.paged_attention import paged_kv_scatter_pallas
+    from repro.serve.paged import device_pool_rows
+
+    bs, mb, nb, hkv, hd, t = 8, 8, 16, 2, 16, 16
+    pool = jnp.zeros((device_pool_rows(nb), bs, hkv, hd), jnp.float32)
+    tab = np.full((2, mb), -1, np.int32)
+    tab[0, :2] = [1, 2]
+    tab[1, 1:4] = [5, 6, 7]
+    knew = jnp.zeros((2, t, hkv, hd), jnp.float32)
+    calls = trace_and_collect(
+        lambda *a: paged_kv_scatter_pallas(*a, interpret=True),
+        knew, knew, pool, pool, jnp.asarray(tab),
+        jnp.asarray([0, 12], jnp.int32), jnp.asarray([t, t], jnp.int32))
+    assert len(calls) == 1
+    ge = eval_pallas_eqn(calls[0].eqn, calls[0].invals)
+    assert not isinstance(ge, str), ge
+    issues = check_grid(ge)
+    assert not [i for i in issues if not i.get("info")], issues
+    # row 0's chunk [0,16) spans 3 logical steps but only 2 allocated
+    # blocks — the third parks on the sentinel and is reported as info
+    assert any(i["kind"] == "sentinel-parked" for i in issues)
+
+
+def test_hbm_measured_matches_cost_model():
+    """In-process version of hbm.cost-model: zero errors, and every
+    COST_MODEL entry was exercised."""
+    from repro.analysis import Context
+    from repro.analysis.hbm import rule_hbm_cost_model
+    from repro.kernels import COST_MODEL
+
+    findings = rule_hbm_cost_model(Context())
+    errs = [f for f in findings if f.severity == "error"]
+    assert not errs, [f.message for f in errs]
+    checked = {f.obj for f in findings if f.severity == "info"}
+    assert checked == set(COST_MODEL)
 
 
 @pytest.mark.parametrize("shapes", [(8, 4), [(8, 4), (32,)]])

@@ -6,7 +6,7 @@ import json
 
 from benchmarks.check_bench import (REQUIRED_KERNEL_ROWS, REQUIRED_ROWS,
                                     REQUIRED_SERVING_ROWS, check_regressions,
-                                    check_trajectory, main)
+                                    check_since_seed, check_trajectory, main)
 
 
 def _run(rows):
@@ -148,3 +148,57 @@ def test_new_and_vanished_rows_not_regression_compared(tmp_path):
     p = tmp_path / "b.json"
     p.write_text(json.dumps([prev, cur]))
     assert check_regressions(str(p)) == []
+
+
+# ------------------------------ since-seed anti-compounding gate (ISSUE 10)
+
+def _seed_and_current(tmp_path, seed_us, *step_us):
+    """A seed trajectory (first entry = baseline at ``seed_us``) and a
+    current trajectory whose steps each grew gently to the last value."""
+    seed = tmp_path / "seed.json"
+    seed.write_text(json.dumps(_run(
+        [dict(r, us_per_call=seed_us) for r in _healthy_rows()])))
+    runs = [_run([dict(r, us_per_call=us) for r in _healthy_rows()])[0]
+            for us in step_us]
+    cur = tmp_path / "b.json"
+    cur.write_text(json.dumps(runs))
+    return str(cur), str(seed)
+
+
+def test_since_seed_catches_compounded_drift(tmp_path):
+    """Four +40% steps each pass the 50% latest-vs-previous gate, but
+    the cumulative ~3.8x fails the since-seed gate — the compounding
+    loophole this mode exists to close."""
+    cur, seed = _seed_and_current(tmp_path, 10.0, 14.0, 19.6, 27.4, 38.4)
+    assert check_regressions(cur) == []            # each step looks fine
+    probs = check_since_seed(cur, seed)
+    assert probs and all("since-seed" in m for m in probs)
+    # only kernel/* rows are seed-gated (serving rows churn by design)
+    assert all(m.startswith("kernel/") for m in probs)
+    assert main(["check_bench.py", cur, "--since-seed", seed]) == 1
+    assert main(["check_bench.py", cur]) == 0
+
+
+def test_since_seed_threshold_and_new_rows(tmp_path):
+    """Growth inside the (wider) seed threshold passes; rows without a
+    seed baseline are skipped, not failed."""
+    cur, seed = _seed_and_current(tmp_path, 10.0, 25.0)   # +150% < 200%
+    assert check_since_seed(cur, seed) == []
+    assert check_since_seed(cur, seed, threshold=1.0)     # tighter fails
+    data = json.load(open(cur))
+    data[-1]["rows"].append({"name": "kernel/brand_new/1",
+                             "us_per_call": 999.0, "derived": "x"})
+    open(cur, "w").write(json.dumps(data))
+    assert check_since_seed(cur, seed) == []
+
+
+def test_since_seed_missing_baseline_is_an_error(tmp_path):
+    """An unreadable or kernel-row-less seed file must FAIL, not turn
+    the gate off silently."""
+    cur, seed = _seed_and_current(tmp_path, 10.0, 10.0)
+    assert check_since_seed(cur, str(tmp_path / "nope.json"))
+    (tmp_path / "seed.json").write_text("[]")
+    assert check_since_seed(cur, seed)
+    (tmp_path / "seed.json").write_text(json.dumps(_run(
+        [{"name": "serving/only", "us_per_call": 1.0, "derived": "x"}])))
+    assert check_since_seed(cur, seed)

@@ -172,7 +172,8 @@ def test_ops_wrappers_survive_padding_shapes(rng):
 
 # ----------------------------------------------------------- dispatch layer
 
-from jaxpr_utils import count_pallas_calls as _count_pallas_calls  # noqa: E402
+from repro.analysis.jaxpr_utils import (  # noqa: E402
+    count_pallas_calls as _count_pallas_calls)
 
 
 def test_sparse_linear_lowers_to_single_pallas_call(rng):

@@ -164,7 +164,8 @@ def test_env_override_forces_dispatch_mode(tiny, monkeypatch):
 
 # --------------------------------------------------- jaxpr dispatch pins
 
-from jaxpr_utils import pool_eqn_count as _pool_eqn_count  # noqa: E402
+from repro.analysis.jaxpr_utils import (  # noqa: E402
+    pool_eqn_count as _pool_eqn_count)
 
 
 def test_step_program_pool_ops_stay_in_kernel(tiny):
@@ -174,15 +175,17 @@ def test_step_program_pool_ops_stay_in_kernel(tiny):
     gather and the host-side flat-index KV scatter moved inside
     pallas_call.  With kernels off the oracle forms are still there, so
     the pin bites."""
-    from repro.serve.paged import init_paged_cache, max_blocks_per_slot
+    from repro.serve.paged import (device_pool_rows, init_paged_cache,
+                                   max_blocks_per_slot)
     cfg, model, params = tiny
     slots, bs = 2, 8
     mb = max_blocks_per_slot(MAX_SEQ, bs)
     nb = slots * mb
-    # the pooled-KV leaves, 4D and as the flat row view the host-side
-    # scatter used to write through
-    pool_shapes = {(nb, bs, cfg.n_kv_heads, cfg.head_dim),
-                   (nb * bs, cfg.n_kv_heads, cfg.head_dim)}
+    rows = device_pool_rows(nb)
+    # the pooled-KV leaves (+1 sentinel row), 4D and as the flat row view
+    # the host-side scatter used to write through
+    pool_shapes = {(rows, bs, cfg.n_kv_heads, cfg.head_dim),
+                   (rows * bs, cfg.n_kv_heads, cfg.head_dim)}
 
     def jaxpr_for(kernels):
         pol = DENSE.with_(use_pallas_kernels=kernels)

@@ -214,7 +214,8 @@ def test_paged_attention_kernel_gqa_and_single_head(rng):
 
 # --------------------------------------------- windowed flash self-attention
 
-from jaxpr_utils import has_pallas_call as _has_pallas_call  # noqa: E402
+from repro.analysis.jaxpr_utils import (  # noqa: E402
+    has_pallas_call as _has_pallas_call)
 
 
 @pytest.mark.parametrize("t,d,w", [(128, 32, 32), (256, 64, 96)])

@@ -356,7 +356,7 @@ def test_unallocated_block_fence_survives_poison():
 # -------------------------------------- no full-view gather on the hot path
 
 def _pool_gather_count(jaxpr, pool_shape) -> int:
-    from jaxpr_utils import pool_eqn_count
+    from repro.analysis.jaxpr_utils import pool_eqn_count
     return pool_eqn_count(jaxpr, pool_shape, "gather")
 
 
@@ -366,7 +366,8 @@ def test_paged_hot_path_has_no_full_view_gather(tiny):
     (the O(max_blocks·block_size) logical-view materialization) — and with
     it disabled the oracle gather is still there (the check bites)."""
     from repro.serve import slots as slot_ops
-    from repro.serve.paged import init_paged_cache, max_blocks_per_slot
+    from repro.serve.paged import (device_pool_rows, init_paged_cache,
+                                   max_blocks_per_slot)
     cfg, model, params = tiny
     slots, bs = 2, 8
     mb = max_blocks_per_slot(MAX_SEQ, bs)
@@ -378,7 +379,7 @@ def test_paged_hot_path_has_no_full_view_gather(tiny):
     tab[1, :3] = [4, 5, 6]
     cache["block_table"] = jnp.asarray(tab)
     cache["pos"] = jnp.asarray([10, 7], jnp.int32)
-    pool_shape = (nb, bs, cfg.n_kv_heads, cfg.head_dim)
+    pool_shape = (device_pool_rows(nb), bs, cfg.n_kv_heads, cfg.head_dim)
     kernel_pol = DENSE.with_(use_pallas_kernels=True)
 
     toks = jnp.zeros((slots, 1), jnp.int32)
